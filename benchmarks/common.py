@@ -1,0 +1,60 @@
+"""Shared benchmark utilities.
+
+Methodology note (EXPERIMENTS.md): this container is one CPU, so the
+paper's multi-node wall-clocks are validated two ways —
+  (i)  EXACT work-distribution math: pairs per reduce task from the
+       plans (the paper's own balance metric), and
+  (ii) MEASURED vectorized matching on data that fits one host, giving
+       a cost-per-pair that converts loads into modeled makespans:
+           makespan(n) = max_k(load_k) · cost_per_pair + overhead(BDM).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def save_rows(name: str, rows: List[Dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return path
+
+
+def print_table(title: str, rows: List[Dict], cols=None):
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = cols or list(rows[0])
+    widths = {c: max(len(str(c)), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print("  ".join(str(c).ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3g}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,48 @@
+"""Fig. 10 — influence of the number of reduce tasks r (DS1, n=10 nodes,
+m=20). The paper's findings to reproduce: Basic cannot exploit r (its
+makespan is pinned to the largest block, with peaks when several large
+blocks hash to one reducer); BlockSplit is stable; PairRange gains most
+with large r (and wins by ~7% at r=160)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.er import ERConfig, make_products, run_er
+
+from .common import print_table, save_rows
+
+
+def run(n: int = 20_000, quick: bool = False):
+    if quick:
+        n = 8_000
+    ds = make_products(n)
+    rows = []
+    cost_cache = {}
+    for r in (20, 40, 80, 120, 160):
+        for strat in ("basic", "block_split", "pair_range"):
+            res = run_er(ds.titles, ERConfig(strategy=strat, r=r, m=20))
+            work_s = float(res.reducer_seconds.sum())
+            cpp = work_s / max(res.total_pairs, 1)
+            cost_cache.setdefault(strat, cpp)
+            modeled = res.reducer_pairs.max() * cpp + res.bdm_seconds
+            rows.append({
+                "r": r, "strategy": strat,
+                "max_load": int(res.reducer_pairs.max()),
+                "imbalance": round(float(res.reducer_pairs.max()
+                                         / max(res.reducer_pairs.mean(), 1)), 2),
+                "map_kv_pairs": res.map_output_size,
+                "modeled_makespan_s": round(modeled, 4),
+            })
+    print_table("Fig. 10 — vary r (modeled makespan)", rows)
+    save_rows("fig10_reduce_tasks", rows)
+    b160 = [r for r in rows if r["r"] == 160]
+    basic = next(r for r in b160 if r["strategy"] == "basic")
+    best = min(r["modeled_makespan_s"] for r in b160
+               if r["strategy"] != "basic")
+    print(f"speedup of balanced vs Basic at r=160: "
+          f"{basic['modeled_makespan_s'] / max(best, 1e-9):.1f}× (paper: 6×)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

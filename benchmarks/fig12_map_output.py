@@ -1,0 +1,50 @@
+"""Fig. 12 — map output volume (kv-pairs emitted) vs r.
+
+Exact counts from the plans: Basic emits every entity once; BlockSplit
+replicates split-block entities once per non-empty partition
+(step-function in r: more reducers → more blocks split, bounded by m);
+PairRange's replication grows ~linearly with r. On the TPU mapping this
+is the collective-volume term (bytes over ICI) — reported here both as
+kv-pairs (paper units) and as gathered feature bytes."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compute_bdm, entity_indices, plan_basic, plan_block_split, plan_pair_range
+from repro.core.pair_range import map_output_size
+from repro.er.blocking import prefix_block_ids
+from repro.er.datasets import make_products
+
+from .common import print_table, save_rows
+
+FEATURE_BYTES = 256 * 4 + 64 + 4   # ngram f32 + codes + length per entity
+
+
+def run(n: int = 20_000, quick: bool = False):
+    if quick:
+        n = 8_000
+    ds = make_products(n)
+    bid, _ = prefix_block_ids(ds.titles, ds.prefix_len)
+    m = 20
+    part = np.minimum(np.arange(ds.n) * m // ds.n, m - 1)
+    bdm = compute_bdm(bid, part, int(bid.max()) + 1, m)
+    rows = []
+    for r in (20, 40, 80, 120, 160):
+        basic = plan_basic(bdm, r)
+        bsplit = plan_block_split(bdm, r)
+        prange = plan_pair_range(bdm, r)
+        for name, size in (("basic", basic.map_output_size()),
+                           ("block_split", bsplit.map_output_size()),
+                           ("pair_range", map_output_size(prange))):
+            rows.append({
+                "r": r, "strategy": name, "map_kv_pairs": int(size),
+                "replication": round(size / ds.n, 3),
+                "ici_mbytes": round(size * FEATURE_BYTES / 1e6, 1),
+            })
+    print_table("Fig. 12 — map output volume", rows)
+    save_rows("fig12_map_output", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

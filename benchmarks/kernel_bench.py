@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: the pair-similarity hot spot.
+
+On this CPU container the Pallas kernels run in interpret mode (Python —
+correctness only, not speed), so throughput is measured on the XLA path
+and the kernel tiling parameters are reported structurally (VMEM bytes
+per grid step, MXU-aligned tile dims). Real-TPU wall clocks belong on
+real TPUs; the roofline harness (launch/roofline.py) covers the compiled
+side."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import print_table, save_rows
+
+
+def _bench(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+    sizes = [(1024, 256), (4096, 256)] if not quick else [(1024, 256)]
+    for n, d in sizes:
+        a = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        for bm in (128, 256):
+            vmem = (bm * d + bm * d + bm * bm) * 4
+            t = _bench(lambda x=a: ops.pair_scores(
+                x, x, threshold=0.8, triangular=True, impl="xla"))
+            pairs = n * (n - 1) / 2
+            rows.append({
+                "kernel": "pair_sim", "n": n, "d": d, "tile": f"{bm}x{bm}",
+                "vmem_per_step_kib": vmem // 1024,
+                "xla_ref_s": round(t, 4),
+                "gpairs_per_s(xla)": round(pairs / t / 1e9, 3),
+            })
+    print_table("kernel bench — pair_sim (XLA path; Pallas = TPU target)",
+                rows)
+    save_rows("kernel_bench", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

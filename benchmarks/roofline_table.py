@@ -1,0 +1,53 @@
+"""Render the §Dry-run / §Roofline markdown tables from the dry-run JSON
+outputs: ``python -m benchmarks.roofline_table [--mesh 16x16]``."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _fmt_s(v):
+    if v is None:
+        return "-"
+    if v >= 1:
+        return f"{v:.2f}s"
+    return f"{v * 1e3:.1f}ms"
+
+
+def render(mesh: str = "16x16") -> str:
+    path = os.path.join(os.path.dirname(__file__), "out",
+                        f"dryrun_{mesh}.json")
+    with open(path) as f:
+        rows = json.load(f)
+    rows.sort(key=lambda r: (r.get("arch", ""), r.get("shape", "")))
+    out = [
+        f"### Roofline — mesh {mesh} "
+        f"({rows[0].get('chips', '?') if rows else '?'} chips)",
+        "",
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "step | useful-FLOPs | MFU | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"FAIL | — | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck']} | {_fmt_s(r['step_s'])} | "
+            f"{r['useful_flops_frac']:.2f} | {r['mfu']:.3f} | "
+            f"{r.get('temp_bytes_gib', 0):.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--mesh", default="16x16")
+    print(render(p.parse_args().mesh))

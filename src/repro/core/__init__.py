@@ -1,0 +1,32 @@
+"""Core contribution of Kolb/Thor/Rahm 2011: skew-aware load balancing for
+blocked pairwise workloads — BDM, Basic, BlockSplit, PairRange, and the
+two-source extension, adapted to static-shape SPMD execution on TPU meshes.
+"""
+from . import enumeration  # noqa: F401
+from .assignment import greedy_lpt, greedy_lpt_jnp, makespan_stats  # noqa: F401
+from .basic import BasicPlan, plan_basic  # noqa: F401
+from .bdm import (  # noqa: F401
+    blocked_layout,
+    compute_bdm,
+    compute_bdm_jnp,
+    entity_indices,
+    entity_indices_jnp,
+)
+from .block_split import BlockSplitPlan, plan_block_split  # noqa: F401
+from .pair_range import (  # noqa: F401
+    PairRangePlan,
+    entity_range_matrix,
+    map_output_size,
+    pairs_of_range,
+    pairs_of_range_jnp,
+    plan_pair_range,
+    range_block_intervals,
+)
+from .two_source import (  # noqa: F401
+    BlockSplit2Plan,
+    PairRange2Plan,
+    TwoSourceBDM,
+    pairs_of_range_2src,
+    plan_block_split_2src,
+    plan_pair_range_2src,
+)

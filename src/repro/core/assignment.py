@@ -1,0 +1,69 @@
+"""Task -> reduce-task assignment (shared by BlockSplit and the MoE layer).
+
+The paper's BlockSplit assigns match tasks with a greedy LPT heuristic:
+sort tasks by pair count descending, then repeatedly give the next task to
+the reduce task with the fewest assigned pairs (§IV, Alg. 1 lines 22-27).
+
+Two twins:
+  * :func:`greedy_lpt` — numpy host planning (dynamic task count).
+  * :func:`greedy_lpt_jnp` — jnp/jit-able (static shapes) via lax.scan with
+    a running-load argmin; reused by models/moe.py balanced dispatch where
+    the "tasks" are experts and the loads are token counts.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["greedy_lpt", "greedy_lpt_jnp", "makespan_stats"]
+
+
+def greedy_lpt(weights: np.ndarray, r: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Assign each weighted task to one of ``r`` bins, largest-first.
+
+    Returns ``(assignment, loads)`` — assignment[t] in [0, r), loads (r,).
+    Ties broken by lowest bin index (paper's getNextReduceTask).
+    """
+    w = np.asarray(weights, np.int64)
+    order = np.argsort(-w, kind="stable")
+    assignment = np.empty(w.shape[0], np.int64)
+    loads = np.zeros(r, np.int64)
+    for t in order:
+        k = int(np.argmin(loads))
+        assignment[t] = k
+        loads[k] += w[t]
+    return assignment, loads
+
+
+def greedy_lpt_jnp(weights, r: int):
+    """jnp twin of :func:`greedy_lpt` (jit-able; O(T·r) scan)."""
+    import jax
+    import jax.numpy as jnp
+
+    w = weights
+    order = jnp.argsort(-w, stable=True)
+
+    def step(loads, t):
+        k = jnp.argmin(loads)
+        loads = loads.at[k].add(w[t])
+        return loads, k
+
+    loads, bins_sorted = jax.lax.scan(step, jnp.zeros(r, w.dtype), order)
+    assignment = jnp.zeros_like(order).at[order].set(bins_sorted)
+    return assignment, loads
+
+
+def makespan_stats(loads: np.ndarray) -> dict:
+    """Balance metrics used across benchmarks (paper's implicit metric)."""
+    loads = np.asarray(loads, np.float64)
+    total = loads.sum()
+    mean = total / loads.shape[0] if loads.shape[0] else 0.0
+    mx = loads.max() if loads.size else 0.0
+    return {
+        "total": float(total),
+        "mean": float(mean),
+        "max": float(mx),
+        "imbalance": float(mx / mean) if mean > 0 else 1.0,
+        "idle_frac": float(1.0 - total / (mx * loads.shape[0])) if mx > 0 else 0.0,
+    }

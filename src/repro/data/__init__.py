@@ -1,0 +1,2 @@
+from .packing import lpt_pack, pack_documents  # noqa: F401
+from .pipeline import synthetic_lm_batches  # noqa: F401

@@ -1,0 +1,17 @@
+"""Entity-resolution substrate: featurization, blocking, similarity,
+datasets, the end-to-end pipeline (paper Fig. 2), and the shard_map
+distributed runtime."""
+from .blocking import (  # noqa: F401
+    dense_block_ids,
+    exponential_block_ids,
+    prefix_block_ids,
+)
+from .datasets import Dataset, make_products, make_publications  # noqa: F401
+from .encode import encode_titles, ngram_features  # noqa: F401
+from .pipeline import ERConfig, ERResult, run_er  # noqa: F401
+from .similarity import (  # noqa: F401
+    cosine_scores,
+    edit_distance,
+    edit_similarity,
+    two_stage_match,
+)

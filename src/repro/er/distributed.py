@@ -1,0 +1,192 @@
+"""Distributed ER runtime: the paper's two MR jobs as shard_map programs.
+
+Mapping (DESIGN.md §2): input partition Π_i ↔ per-device row shard on the
+``data`` (× ``pod``) mesh axis; the shuffle ↔ ``all_gather`` on ICI; a
+reduce task ↔ a work shard executed by one device. The number of logical
+reduce tasks ``r`` stays decoupled from the device count ``n_dev`` exactly
+as in the paper (r = 10·n there): device ``d`` executes reducers
+``{k : k mod n_dev = d}`` (round-robin), which is also the straggler/
+elasticity unit — see :func:`device_assignment`.
+
+Job 1 (:func:`compute_bdm_sharded`): each device bincounts its local
+blocking keys — its BDM *column* — then one ``all_gather`` produces the
+full b × m matrix, replicated. This is Alg. 3 with the footnote-2 combiner
+(the local bincount) built in.
+
+Job 2, two executors:
+  * :func:`match_pair_range_dist` — PairRange fully in-jit: every device
+    derives its own pair list from the tiny replicated plan arrays
+    (sizes/offsets/estart) via the closed-form inverse — the paper's
+    map-side "relevant ranges" computation. No host-side pair
+    materialization; essential at DS2 scale (6.7·10⁹ pairs).
+  * :func:`match_shards_hostplan` — generic executor for Basic/BlockSplit:
+    the host plan (the map phase) emits per-device padded row-index
+    arrays; devices gather the rows and match.
+
+Both all_gather the (row-sharded) feature/code tensors — the collective-
+volume analog of the paper's map-output replication (Fig. 12); the
+benchmarks account it in bytes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.pair_range import PairRangePlan, pairs_of_range_jnp
+from .similarity import two_stage_match
+
+__all__ = [
+    "compute_bdm_sharded",
+    "match_pair_range_dist",
+    "match_shards_hostplan",
+    "device_assignment",
+    "plan_rows_for_devices",
+]
+
+
+# ---------------------------------------------------------------------------
+# Job 1: BDM
+# ---------------------------------------------------------------------------
+
+def compute_bdm_sharded(block_ids, num_blocks: int, mesh: Mesh,
+                        axis: str = "data"):
+    """block_ids: (n,) int32 sharded over ``axis``; one device shard = one
+    input partition Π_i. Returns the replicated (b, m) BDM, m = axis size."""
+
+    def job1(local_ids):
+        col = jnp.bincount(local_ids.reshape(-1), length=num_blocks)
+        cols = jax.lax.all_gather(col, axis)          # (m, b)
+        return cols.T.astype(jnp.int32)               # (b, m)
+
+    shard = jax.shard_map(
+        job1, mesh=mesh,
+        in_specs=P(axis), out_specs=P(),
+        check_vma=False)  # all_gather output is replicated by construction
+    return shard(block_ids)
+
+
+# ---------------------------------------------------------------------------
+# Reduce-task → device round-robin (straggler / elasticity unit)
+# ---------------------------------------------------------------------------
+
+def device_assignment(r: int, n_dev: int,
+                      healthy: Optional[np.ndarray] = None) -> np.ndarray:
+    """reducer k → device. Round-robin over the *healthy* devices, so a
+    failed/straggling device's work shards re-spread evenly — the plan is a
+    pure function of (r, healthy mask), recomputable anywhere (the BDM
+    restart argument, DESIGN.md §3)."""
+    if healthy is None:
+        healthy = np.ones(n_dev, bool)
+    alive = np.flatnonzero(healthy)
+    if alive.size == 0:
+        raise ValueError("no healthy devices")
+    return alive[np.arange(r) % alive.size]
+
+
+def plan_rows_for_devices(reducer_rows, r: int, n_dev: int,
+                          healthy: Optional[np.ndarray] = None
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Concatenate per-reducer (rows_a, rows_b) into per-device padded
+    arrays (n_dev, cap). Returns (rows_a, rows_b, valid)."""
+    dev_of = device_assignment(r, n_dev, healthy)
+    per_dev_a = [[] for _ in range(n_dev)]
+    per_dev_b = [[] for _ in range(n_dev)]
+    for k in range(r):
+        ra, rb = reducer_rows[k]
+        d = int(dev_of[k])
+        per_dev_a[d].append(np.asarray(ra, np.int32))
+        per_dev_b[d].append(np.asarray(rb, np.int32))
+    cat_a = [np.concatenate(x) if x else np.zeros(0, np.int32) for x in per_dev_a]
+    cat_b = [np.concatenate(x) if x else np.zeros(0, np.int32) for x in per_dev_b]
+    cap = max(1, max(a.shape[0] for a in cat_a))
+    rows_a = np.zeros((n_dev, cap), np.int32)
+    rows_b = np.zeros((n_dev, cap), np.int32)
+    valid = np.zeros((n_dev, cap), bool)
+    for d in range(n_dev):
+        c = cat_a[d].shape[0]
+        rows_a[d, :c] = cat_a[d]
+        rows_b[d, :c] = cat_b[d]
+        valid[d, :c] = True
+    return rows_a, rows_b, valid
+
+
+# ---------------------------------------------------------------------------
+# Job 2 executors
+# ---------------------------------------------------------------------------
+
+def _match_local(feats, codes, lens, ra, rb, valid, threshold, margin):
+    mask, score = two_stage_match(
+        feats[ra], feats[rb], codes[ra], lens[ra], codes[rb], lens[rb],
+        threshold=threshold, filter_margin=margin)
+    mask = mask & valid
+    return mask, jnp.where(mask, score, 0.0)
+
+
+def match_pair_range_dist(feats, codes, lens, plan: PairRangePlan,
+                          mesh: Mesh, axis: str = "data",
+                          threshold: float = 0.8, filter_margin: float = 0.25):
+    """PairRange on a mesh, fully in-jit.
+
+    feats (n, d) f32 / codes (n, L) uint8 / lens (n,) i32 are in the
+    *blocked layout*, row-sharded over ``axis``. Every device owns the
+    contiguous pair range [d·cap, (d+1)·cap) with cap = ⌈P/n_dev⌉ — the
+    paper's eq. (2) with r = n_dev (additional logical ranges per device
+    compose by concatenation since ranges are contiguous in p).
+
+    Returns (rows_a, rows_b, mask, score), each (n_dev, cap), replicated
+    row-block d holding device d's results.
+    """
+    n_dev = int(np.prod([mesh.shape[a] for a in (axis,)]))
+    total = int(plan.total_pairs)
+    cap = max(1, -(-total // n_dev))
+    sizes = jnp.asarray(plan.block_sizes, jnp.int32)
+    offsets = jnp.asarray(plan.offsets, jnp.int32)
+    estart = jnp.asarray(plan.estart, jnp.int32)
+
+    def job2(feats_l, codes_l, lens_l):
+        d = jax.lax.axis_index(axis)
+        feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
+        codes_g = jax.lax.all_gather(codes_l, axis, tiled=True)
+        lens_g = jax.lax.all_gather(lens_l, axis, tiled=True)
+        lo = (d * cap).astype(jnp.int32)
+        ra, rb, valid = pairs_of_range_jnp(sizes, offsets, estart, lo, cap, total)
+        mask, score = _match_local(
+            feats_g, codes_g, lens_g, ra, rb, valid, threshold, filter_margin)
+        out = lambda x: x[None]  # (1, cap) per device → (n_dev, cap) stacked
+        return out(ra), out(rb), out(mask), out(score)
+
+    shard = jax.shard_map(
+        job2, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+        check_vma=False)  # replicated plan constants mix with varying data
+    return shard(feats, codes, lens)
+
+
+def match_shards_hostplan(feats, codes, lens, rows_a, rows_b, valid,
+                          mesh: Mesh, axis: str = "data",
+                          threshold: float = 0.8, filter_margin: float = 0.25):
+    """Generic executor: per-device padded row pairs (from
+    :func:`plan_rows_for_devices`), row-sharded features. Used by Basic and
+    BlockSplit (whose pair lists come from host tile geometry)."""
+
+    def job2(feats_l, codes_l, lens_l, ra, rb, v):
+        feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
+        codes_g = jax.lax.all_gather(codes_l, axis, tiled=True)
+        lens_g = jax.lax.all_gather(lens_l, axis, tiled=True)
+        mask, score = _match_local(
+            feats_g, codes_g, lens_g, ra[0], rb[0], v[0],
+            threshold, filter_margin)
+        return mask[None], score[None]
+
+    shard = jax.shard_map(
+        job2, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_vma=False)  # replicated plan constants mix with varying data
+    return shard(feats, codes, lens, rows_a, rows_b, valid)

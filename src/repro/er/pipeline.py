@@ -1,0 +1,250 @@
+"""End-to-end ER pipeline — the paper's Fig. 2 workflow on one host.
+
+Job 1: blocking keys + block distribution matrix (BDM).
+Job 2: strategy plan (Basic / BlockSplit / PairRange) + reduce-phase
+matching (two-stage cosine-filter → edit-distance verify).
+
+Reduce tasks execute as *vectorized pair batches*: a reduce task's pair
+list is materialized from the plan (closed form for PairRange, tile
+geometry for BlockSplit) and pushed through the jit-ed matcher in fixed-
+size chunks (one compilation, padded tail). Per-reducer wall time is
+measured so the benchmarks can report both the paper's balance metric
+(pairs per reducer) and observed makespans.
+
+Entities without blocking keys (block id −1) follow the paper's
+decomposition: match_B(R,R) over the keyed subset ∪ match_⊥(R, R_∅) via a
+two-source cartesian job (§III, Appendix I preamble).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    blocked_layout,
+    compute_bdm,
+    entity_indices,
+    plan_basic,
+    plan_block_split,
+    plan_pair_range,
+    pairs_of_range,
+)
+from ..core.two_source import TwoSourceBDM, plan_pair_range_2src, pairs_of_range_2src
+from .blocking import prefix_block_ids
+from .encode import encode_titles, ngram_features
+from .similarity import two_stage_match
+
+__all__ = ["ERConfig", "ERResult", "run_er"]
+
+_CHUNK = 65_536
+
+
+@dataclass
+class ERConfig:
+    strategy: str = "pair_range"       # basic | block_split | pair_range
+    r: int = 32                        # reduce tasks
+    m: int = 8                         # map tasks / input partitions
+    threshold: float = 0.8
+    prefix_len: int = 3
+    feature_dim: int = 256
+    max_len: int = 64
+    filter_margin: float = 0.25
+    match_missing_keys: bool = True
+
+
+@dataclass
+class ERResult:
+    matches: Set[Tuple[int, int]]
+    total_pairs: int
+    reducer_pairs: np.ndarray          # (r,) planned pair loads
+    map_output_size: int               # kv-pairs emitted by map (Fig. 12)
+    bdm_seconds: float
+    reducer_seconds: np.ndarray        # (r,) measured matching time
+    extra: Dict = field(default_factory=dict)
+
+    @property
+    def makespan_seconds(self) -> float:
+        return float(self.reducer_seconds.max()) if self.reducer_seconds.size else 0.0
+
+
+_VERIFY_CHUNK = 8_192
+
+
+def _match_pairs_chunked(feats, codes, lens, rows_a, rows_b,
+                         threshold, margin) -> Tuple[np.ndarray, np.ndarray]:
+    """Filter-and-verify over (rows_a, rows_b); returns the matched row
+    pairs. Stage 1 (cosine, a paired dot product) runs over everything and
+    prunes; stage 2 (exact edit distance) runs only on survivors — this is
+    the sparsity the Pallas executor exploits at tile level, realized here
+    at chunk level. Fixed chunk sizes → one jit compilation each."""
+    from .similarity import edit_similarity
+
+    n = rows_a.shape[0]
+    cand_a, cand_b = [], []
+    for lo in range(0, n, _CHUNK):  # stage 1: numpy paired dots
+        a = rows_a[lo:lo + _CHUNK]
+        b = rows_b[lo:lo + _CHUNK]
+        cos = np.einsum("pd,pd->p", feats[a], feats[b])
+        sel = np.flatnonzero(cos >= threshold - margin)
+        cand_a.append(a[sel])
+        cand_b.append(b[sel])
+    ca = np.concatenate(cand_a) if cand_a else np.zeros(0, np.int64)
+    cb = np.concatenate(cand_b) if cand_b else np.zeros(0, np.int64)
+
+    hit_a, hit_b = [], []
+    for lo in range(0, ca.shape[0], _VERIFY_CHUNK):  # stage 2: exact verify
+        a = ca[lo:lo + _VERIFY_CHUNK]
+        b = cb[lo:lo + _VERIFY_CHUNK]
+        pad = _VERIFY_CHUNK - a.shape[0]
+        if pad:
+            a = np.concatenate([a, np.zeros(pad, a.dtype)])
+            b = np.concatenate([b, np.zeros(pad, b.dtype)])
+        sim = np.array(edit_similarity(codes[a], lens[a], codes[b], lens[b]))
+        if pad:
+            sim[_VERIFY_CHUNK - pad:] = 0.0
+        sel = np.flatnonzero(sim >= threshold)
+        hit_a.append(a[sel])
+        hit_b.append(b[sel])
+    if not hit_a:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(hit_a), np.concatenate(hit_b)
+
+
+def _tile_pairs(a0: int, alen: int, b0: int, blen: int, tri: bool):
+    """Row-index pairs of one BlockSplit match task."""
+    if tri:
+        x, y = np.triu_indices(alen, k=1)
+        return a0 + x, a0 + y
+    x, y = np.meshgrid(np.arange(alen), np.arange(blen), indexing="ij")
+    return a0 + x.ravel(), b0 + y.ravel()
+
+
+def run_er(titles: Sequence[str], config: ERConfig = ERConfig(),
+           block_ids: Optional[np.ndarray] = None) -> ERResult:
+    """Match a single source. ``block_ids`` overrides prefix blocking (used
+    by the Fig. 9 skew study)."""
+    n = len(titles)
+    cfg = config
+    if block_ids is None:
+        block_ids, _ = prefix_block_ids(titles, k=cfg.prefix_len)
+    block_ids = np.asarray(block_ids, np.int64)
+
+    # Input partitions: m contiguous row ranges (HDFS-split analog).
+    part_ids = np.minimum(
+        np.arange(n, dtype=np.int64) * cfg.m // max(n, 1), cfg.m - 1)
+
+    keyed = block_ids >= 0
+    keyed_idx = np.flatnonzero(keyed)
+
+    # ---- featurize once (shared by both jobs) ----
+    codes, lens = encode_titles(titles, max_len=cfg.max_len)
+    feats = ngram_features(codes, dim=cfg.feature_dim, lengths=lens)
+
+    # ---- Job 1: BDM ----
+    t0 = time.perf_counter()
+    kb = block_ids[keyed_idx]
+    kp = part_ids[keyed_idx]
+    num_blocks = int(kb.max()) + 1 if kb.size else 0
+    bdm = compute_bdm(kb, kp, num_blocks, cfg.m)
+    eidx = entity_indices(kb, kp, bdm)
+    bdm_seconds = time.perf_counter() - t0
+
+    sizes = bdm.sum(axis=1)
+    perm, estart = blocked_layout(kb, eidx, sizes)
+    # perm[blocked_row] = row within keyed_idx → map to global entity ids.
+    to_global = keyed_idx[perm]
+    g_feats = feats[to_global]
+    g_codes = codes[to_global]
+    g_lens = lens[to_global]
+
+    # ---- Job 2: plan + reduce-phase matching ----
+    reducer_rows: List[Tuple[np.ndarray, np.ndarray]] = [
+        (np.zeros(0, np.int64), np.zeros(0, np.int64)) for _ in range(cfg.r)]
+
+    if cfg.strategy == "pair_range":
+        plan = plan_pair_range(bdm, cfg.r)
+        for k in range(cfg.r):
+            _, _, _, ra, rb = pairs_of_range(plan, k)
+            reducer_rows[k] = (ra, rb)
+        reducer_pairs = plan.reducer_pairs
+        from .. import core
+        map_out = core.pair_range.map_output_size(plan) \
+            if plan.total_pairs <= 50_000_000 else -1
+        total = plan.total_pairs
+    elif cfg.strategy == "block_split":
+        plan = plan_block_split(bdm, cfg.r)
+        for t in range(plan.task_block.shape[0]):
+            ra, rb = _tile_pairs(
+                int(plan.task_a_start[t]), int(plan.task_a_len[t]),
+                int(plan.task_b_start[t]), int(plan.task_b_len[t]),
+                bool(plan.task_triangular[t]))
+            k = int(plan.task_reducer[t])
+            pa, pb = reducer_rows[k]
+            reducer_rows[k] = (np.concatenate([pa, ra]), np.concatenate([pb, rb]))
+        reducer_pairs = plan.reducer_pairs
+        map_out = plan.map_output_size()
+        total = plan.total_pairs
+    elif cfg.strategy == "basic":
+        plan = plan_basic(bdm, cfg.r)
+        for k_blk in range(sizes.shape[0]):
+            if sizes[k_blk] < 2:
+                continue
+            ra, rb = _tile_pairs(int(estart[k_blk]), int(sizes[k_blk]), 0, 0, True)
+            k = int(plan.block_reducer[k_blk])
+            pa, pb = reducer_rows[k]
+            reducer_rows[k] = (np.concatenate([pa, ra]), np.concatenate([pb, rb]))
+        reducer_pairs = plan.reducer_pairs
+        map_out = plan.map_output_size()
+        total = plan.total_pairs
+    else:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+
+    matches: Set[Tuple[int, int]] = set()
+    reducer_seconds = np.zeros(cfg.r)
+    for k in range(cfg.r):
+        ra, rb = reducer_rows[k]
+        if ra.size == 0:
+            continue
+        t0 = time.perf_counter()
+        ha, hb = _match_pairs_chunked(
+            g_feats, g_codes, g_lens, ra, rb, cfg.threshold, cfg.filter_margin)
+        reducer_seconds[k] = time.perf_counter() - t0
+        for a, b in zip(to_global[ha], to_global[hb]):
+            matches.add((min(int(a), int(b)), max(int(a), int(b))))
+
+    extra: Dict = {}
+    # ---- match_⊥(R, R_∅): entities without blocking key vs everyone ----
+    if cfg.match_missing_keys and (~keyed).any():
+        null_idx = np.flatnonzero(~keyed)
+        bdm2 = TwoSourceBDM(
+            bdm_r=np.full((1, 1), n, np.int64),
+            bdm_s=np.full((1, 1), null_idx.size, np.int64))
+        plan2 = plan_pair_range_2src(bdm2, cfg.r)
+        extra["null_key_pairs"] = plan2.total_pairs
+        for k in range(cfg.r):
+            _, _, _, rr, rs = pairs_of_range_2src(plan2, k)
+            if rr.size == 0:
+                continue
+            ha, hb = _match_pairs_chunked(
+                feats, codes, lens,
+                rr, null_idx[rs], cfg.threshold, cfg.filter_margin)
+            for a, b in zip(ha, hb):
+                a, b = int(a), int(b)
+                if a != b:
+                    matches.add((min(a, b), max(a, b)))
+        total += plan2.total_pairs
+
+    return ERResult(
+        matches=matches,
+        total_pairs=int(total),
+        reducer_pairs=np.asarray(reducer_pairs, np.int64),
+        map_output_size=int(map_out),
+        bdm_seconds=bdm_seconds,
+        reducer_seconds=reducer_seconds,
+        extra=extra,
+    )

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: flash attention (streaming softmax), GQA-aware.
+
+The serving path's prefill hot spot. Grid is (B·H, q_tiles, kv_tiles)
+with the kv axis innermost; VMEM scratch carries the running max (m),
+normalizer (l) and output accumulator across kv tiles — the standard
+TPU formulation of FlashAttention's online softmax.
+
+Causal jobs skip fully-masked kv tiles structurally: the body runs only
+under ``pl.when(j·bk < (i+1)·bq)`` and finalization fires at the last
+*valid* kv tile of each q tile, halving compute for causal prefill.
+
+GQA without materializing repeated KV: the K/V BlockSpec index_map
+derives the kv-head row from the q-head grid index
+(``batch·KVH + (qh // group)``), so a (B·KVH, S, D) cache is read
+directly — no (B·H, S, D) broadcast copy in HBM.
+
+VMEM per step (f32, hd=128, 512/512 tiles): q 256 KiB + k,v 512 KiB +
+acc/o 256 KiB + s/p 1 MiB ≈ 2.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            num_k_tiles: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        valid = (j * block_k) < ((i + 1) * block_q)
+        last_j = jnp.minimum(
+            num_k_tiles - 1, ((i + 1) * block_q - 1) // block_k)
+    else:
+        valid = True
+        last_j = num_k_tiles - 1
+
+    @pl.when(valid)
+    def _body():
+        q = q_ref[0]                                     # (bq, hd)
+        k = k_ref[0]                                     # (bk, hd)
+        v = v_ref[0]                                     # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        if causal:
+            p = jnp.where(s <= _NEG / 2, 0.0, p)  # fully-masked entries
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(j == last_j)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret",
+                     "num_kv_heads"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    num_kv_heads: int | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, KVH, S, D) with H % KVH == 0.
+
+    Returns (B, H, S, D). S is padded to tile multiples internally (padded
+    keys are masked out by the causal/row-validity logic: padded q rows
+    produce garbage rows that are sliced off; padded k cols are excluded
+    by masking ``cols < S``)."""
+    b, h, s, d = q.shape
+    kvh = num_kv_heads or k.shape[1]
+    group = h // kvh
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(block_q, max(128, 1 << (s - 1).bit_length() if s < 128 else 128)) \
+        if s < block_q else block_q
+    bk = min(block_k, bq) if s < block_k else block_k
+    sp = -(-s // bq) * bq
+    sp = -(-sp // bk) * bk
+    qp = jnp.zeros((b * h, sp, d), q.dtype).at[:, :s].set(q.reshape(b * h, s, d))
+    kp = jnp.zeros((b * kvh, sp, d), k.dtype).at[:, :s].set(k.reshape(b * kvh, s, d))
+    vp = jnp.zeros((b * kvh, sp, d), v.dtype).at[:, :s].set(v.reshape(b * kvh, s, d))
+    if not causal and sp != s:
+        # Mask padded keys via a causal=False-safe trick: zero-length keys
+        # would need an explicit mask; simplest is to fall back to an
+        # s-multiple requirement for non-causal jobs.
+        raise ValueError("non-causal flash requires S % block_k == 0")
+
+    nq, nk = sp // bq, sp // bk
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=bq, block_k=bk,
+        num_k_tiles=nk)
+
+    def kv_index(bh, i, j):
+        return ((bh // h) * kvh + (bh % h) // group, j, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s].reshape(b, h, s, d)

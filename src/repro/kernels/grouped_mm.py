@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: grouped matmul for MoE expert FFNs.
+
+Tokens arrive sorted by expert (the balanced dispatch built on the
+paper's LPT/range machinery produces exactly this layout — experts are
+"blocks", tokens are "entities"). Each expert's segment is padded to a
+multiple of ``block_t`` on the host/jnp side, yielding a tile→expert map
+``tile_expert`` (scalar-prefetch operand). The kernel grid is
+(token_tiles, out_tiles); the BlockSpec index_map reads the expert id for
+the current token tile from the prefetched map and pulls that expert's
+weight strip into VMEM — a MegaBlocks-style block-diagonal GEMM without
+materializing the (T, E, d) one-hot dispatch tensor.
+
+VMEM per step (f32): block_t·d + d·block_f + block_t·block_f floats;
+defaults (128, d≤4096, 128) ≈ 4.2 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["grouped_matmul", "pad_groups"]
+
+
+def _kernel(tile_expert_ref, x_ref, w_ref, o_ref):
+    del tile_expert_ref  # consumed by the index_map only
+    x = x_ref[...]                       # (block_t, d)
+    w = w_ref[0]                         # (d, block_f)
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def grouped_matmul(x, tile_expert, w, *, block_t: int = 128,
+                   block_f: int = 128, interpret: bool = False):
+    """x: (T, d) tokens, expert-sorted and tile-aligned (T % block_t == 0,
+    all tokens in one tile belong to one expert). tile_expert: (T//block_t,)
+    int32. w: (E, d, F). Returns (T, F) = x @ w[expert_of_token].
+    """
+    t, d = x.shape
+    e, _, f = w.shape
+    assert t % block_t == 0, "pad token count to a tile multiple (pad_groups)"
+    fp = -(-f // block_f) * block_f
+    w_p = jnp.zeros((e, d, fp), w.dtype).at[:, :, :f].set(w) if fp != f else w
+
+    grid_spec = pl.GridSpec(
+        grid=(t // block_t, fp // block_f),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i, j, te: (i, 0)),
+            pl.BlockSpec((1, d, block_f), lambda i, j, te: (te[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_f), lambda i, j, te: (i, j)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1),
+        out_shape=jax.ShapeDtypeStruct((t, fp), x.dtype),
+        interpret=interpret,
+    )(tile_expert, x, w_p)
+    return out[:, :f]
+
+
+def pltpu_prefetch(grid_spec: pl.GridSpec, num_scalar_prefetch: int):
+    """Build a PrefetchScalarGridSpec from a plain GridSpec."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch,
+        grid=grid_spec.grid,
+        in_specs=grid_spec.in_specs,
+        out_specs=grid_spec.out_specs,
+    )
+
+
+def pad_groups(x, group_sizes, block_t: int = 128):
+    """Expert-sorted tokens + group sizes → tile-aligned layout.
+
+    x: (T, d) sorted by expert; group_sizes: (E,) with sum T. Returns
+    (x_padded (Tp, d), tile_expert (Tp//block_t,), token_map (Tp,) int32
+    giving the source row of each padded row, −1 for padding).
+
+    Host/jnp-side (shapes depend on values) — in the training path this
+    runs under a fixed capacity so shapes stay static; see models/moe.py.
+    """
+    import numpy as np
+
+    sizes = np.asarray(group_sizes, np.int64)
+    e = sizes.shape[0]
+    padded = -(-sizes // block_t) * block_t
+    padded = np.maximum(padded, 0)
+    tp = int(padded.sum()) if padded.sum() else block_t
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    pstarts = np.concatenate([[0], np.cumsum(padded)[:-1]])
+    token_map = np.full(tp, -1, np.int64)
+    tile_expert = np.zeros(tp // block_t, np.int32)
+    for k in range(e):
+        token_map[pstarts[k]: pstarts[k] + sizes[k]] = np.arange(
+            starts[k], starts[k] + sizes[k])
+        tile_expert[pstarts[k] // block_t: (pstarts[k] + padded[k]) // block_t] = k
+    gathered = jnp.asarray(
+        np.where(token_map[:, None] >= 0, 1, 0), x.dtype
+    ) * x[jnp.asarray(np.maximum(token_map, 0))]
+    return gathered, jnp.asarray(tile_expert), token_map

@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the Pallas kernels, with XLA fallbacks.
+
+Every op takes ``impl``:
+  * "pallas"    — the TPU kernel (compiled; TPU target),
+  * "interpret" — the kernel body interpreted on CPU (correctness path,
+                  used by tests on this CPU-only container),
+  * "xla"       — the pure-jnp reference (dry-run / fallback).
+
+On a CPU backend "pallas" silently degrades to "interpret" so example
+scripts run anywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .grouped_mm import grouped_matmul as _gmm, pad_groups  # noqa: F401
+from .pair_sim import pair_scores as _pair_scores
+
+__all__ = ["pair_scores", "grouped_matmul", "attention", "pad_groups"]
+
+
+def _resolve(impl: str) -> str:
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        return "interpret"
+    return impl
+
+
+def pair_scores(a, b, *, threshold: float = 0.8, triangular: bool = False,
+                block_m: int = 128, block_n: int = 128, impl: str = "pallas"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.pair_scores_ref(a, b, threshold=threshold, triangular=triangular)
+    return _pair_scores(a, b, threshold=threshold, triangular=triangular,
+                        block_m=block_m, block_n=block_n,
+                        interpret=(impl == "interpret"))
+
+
+def grouped_matmul(x, tile_expert, w, *, block_t: int = 128,
+                   block_f: int = 128, impl: str = "pallas"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.grouped_matmul_ref(x, tile_expert, w, block_t=block_t)
+    return _gmm(x, tile_expert, w, block_t=block_t, block_f=block_f,
+                interpret=(impl == "interpret"))
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              block_q: int = 512, block_k: int = 512, impl: str = "xla"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    return _flash(q, k, v, causal=causal, scale=scale,
+                  block_q=block_q, block_k=block_k,
+                  interpret=(impl == "interpret"))

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: tiled pair-similarity — the paper's reduce-phase
+hot spot (§III-A: "the reduce phase consumes ... more than 95% of the
+overall runtime").
+
+A match task (BlockSplit tile or PairRange range segment) reduces to
+scoring A @ Bᵀ over two strips of the entity-feature matrix — pure MXU
+work once titles are encoded as L2-normalized n-gram vectors
+(er/encode.py). The kernel tiles (M, N) into (block_m, block_n) MXU-
+aligned tiles; each grid step keeps one (block_m, d) LHS strip and one
+(d, block_n) RHS strip in VMEM, computes the dot, applies the threshold,
+and optionally the x < y upper-triangular mask (intra-block tasks, k.i /
+unsplit blocks) via global row/col indices derived from program_id.
+
+VMEM per step (f32, d=256, 128×128 tiles): 128·256·4 × 2 + 128·128·4
+≈ 320 KiB — far under the ~16 MiB/core budget; block sizes are exposed
+for the §Perf sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pair_scores"]
+
+
+def _kernel(a_ref, b_ref, o_ref, *, threshold: float, triangular: bool,
+            block_m: int, block_n: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    a = a_ref[...]                       # (block_m, d)
+    b = b_ref[...]                       # (block_n, d)
+    s = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (block_m, block_n) MXU
+    keep = s >= threshold
+    if triangular:
+        rows = i * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        keep = keep & (rows < cols)
+    o_ref[...] = jnp.where(keep, s, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("threshold", "triangular", "block_m", "block_n", "interpret"))
+def pair_scores(a, b, *, threshold: float = 0.8, triangular: bool = False,
+                block_m: int = 128, block_n: int = 128,
+                interpret: bool = False):
+    """Thresholded similarity scores of every (row of a) × (row of b).
+
+    a: (M, d), b: (N, d) — rows L2-normalized. Returns (M, N) f32 with 0
+    where score < threshold (or masked by x < y when ``triangular``).
+    M, N are padded to tile multiples internally.
+    """
+    m, d = a.shape
+    n = b.shape[0]
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    a_p = jnp.zeros((mp, d), a.dtype).at[:m].set(a)
+    b_p = jnp.zeros((np_, d), b.dtype).at[:n].set(b)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, threshold=threshold, triangular=triangular,
+            block_m=block_m, block_n=block_n),
+        grid=(mp // block_m, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets of the
+per-kernel sweep tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pair_scores_ref", "grouped_matmul_ref", "attention_ref"]
+
+
+def pair_scores_ref(a, b, *, threshold: float = 0.8, triangular: bool = False):
+    """(M, d) × (N, d) → thresholded score matrix (M, N)."""
+    s = jnp.einsum("md,nd->mn", a, b, preferred_element_type=jnp.float32)
+    keep = s >= threshold
+    if triangular:
+        m, n = s.shape
+        rows = jnp.arange(m)[:, None]
+        cols = jnp.arange(n)[None, :]
+        keep = keep & (rows < cols)
+    return jnp.where(keep, s, 0.0)
+
+
+def grouped_matmul_ref(x, tile_expert, w, *, block_t: int = 128):
+    """x: (T, d) tile-aligned expert-sorted tokens; w: (E, d, F)."""
+    t, _ = x.shape
+    expert_of_token = jnp.repeat(tile_expert, block_t)
+    w_tok = w[expert_of_token]                       # (T, d, F)
+    return jnp.einsum("td,tdf->tf", x, w_tok,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, H, S, D); k, v: (B, KVH, S, D). Plain softmax attention."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    k = jnp.repeat(k, h // kvh, axis=1)
+    v = jnp.repeat(v, h // kvh, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(p.dtype)).astype(q.dtype)

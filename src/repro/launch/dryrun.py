@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells, single-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod      # 2-pod 512-chip mesh
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k -v
+
+Writes JSON rows to --out (default benchmarks/out/dryrun_<mesh>.json).
+Compile-only: no device buffers are ever allocated (ShapeDtypeStructs +
+eval_shape throughout).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+
+def _compile_once(cfg, shape, mesh, layer_unroll):
+    from repro.launch.steps import build_cell
+
+    cell = build_cell(cfg, shape, mesh, layer_unroll=layer_unroll)
+    t0 = time.time()
+    # production buffer reuse: decode/prefill update the cache in place,
+    # train updates params/optimizer in place
+    donate = (2,) if cell.kind in ("prefill", "decode") else (0, 1)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def run_cell(cfg, shape, mesh, mesh_name, verbose=False, extrapolate=True):
+    """Compile (u=1) — the production lowering — and, when
+    ``extrapolate``, also u=2 to back out per-layer cost: a scan body is
+    counted once by cost analysis, so  true = c1 + (trips−1)·(c2−c1)."""
+    from repro.launch.roofline import analyze_compiled, extrapolate_report
+    from repro.launch.steps import scan_trips
+
+    compiled1, t1 = _compile_once(cfg, shape, mesh, 1)
+    mem = compiled1.memory_analysis()
+    rep = analyze_compiled(compiled1, cfg, shape, mesh_name, mesh.size)
+    t2 = 0.0
+    if extrapolate and scan_trips(cfg) > 1:
+        compiled2, t2 = _compile_once(cfg, shape, mesh, 2)
+        rep2 = analyze_compiled(compiled2, cfg, shape, mesh_name, mesh.size)
+        rep = extrapolate_report(rep, rep2, scan_trips(cfg))
+    row = rep.row()
+    row.update({"compile_s": round(t1 + t2, 1), "status": "ok",
+                "temp_bytes_gib": round(rep.temp_bytes / 2**30, 2),
+                "arg_bytes_gib": round(rep.argument_bytes / 2**30, 2)})
+    if verbose:
+        print(f"  memory_analysis(u=1): {mem}")
+        print(f"  extrapolated flops/dev={row['flops/dev']:.3e} "
+              f"bytes/dev={row['bytes/dev']:.3e}")
+        print(f"  collectives: {rep.coll}")
+    return row
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="single arch id (default: all)")
+    p.add_argument("--shape", default=None, help="single shape (default: all)")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default=None)
+    p.add_argument("--no-extrapolate", action="store_true",
+                   help="single u=1 compile per cell (the multi-pod pass "
+                        "only proves the pod axis shards; the roofline "
+                        "table is single-pod)")
+    p.add_argument("-v", "--verbose", action="store_true")
+    args = p.parse_args(argv)
+
+    from repro.configs import ARCHS, SHAPES, skip_reason
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    rows, failures = [], []
+    for a in archs:
+        cfg = ARCHS[a]
+        for s in shapes:
+            shape = SHAPES[s]
+            reason = skip_reason(cfg, shape)
+            tag = f"{a} × {s} × {mesh_name}"
+            if reason:
+                print(f"[skip] {tag}: {reason}")
+                rows.append({"arch": a, "shape": s, "mesh": mesh_name,
+                             "status": "skip", "reason": reason})
+                continue
+            print(f"[cell] {tag} ...", flush=True)
+            try:
+                row = run_cell(cfg, shape, mesh, mesh_name, args.verbose,
+                               extrapolate=not args.no_extrapolate)
+                rows.append(row)
+                print(f"  ok: compile {row['compile_s']}s "
+                      f"bottleneck={row['bottleneck']} step={row['step_s']:.4f}s "
+                      f"mfu={row['mfu']:.3f} "
+                      f"temp={row['temp_bytes_gib']}GiB", flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append(tag)
+                rows.append({"arch": a, "shape": s, "mesh": mesh_name,
+                             "status": "fail", "error": str(e)[:500]})
+                print(f"  FAIL: {e}", flush=True)
+                if args.verbose:
+                    traceback.print_exc()
+
+    out = args.out or f"benchmarks/out/dryrun_{mesh_name}.json"
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    # merge into existing rows (single-cell reruns update their cell only)
+    merged = {}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                for r in json.load(f):
+                    merged[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+        except (json.JSONDecodeError, OSError):
+            pass
+    for r in rows:
+        merged[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    rows_out = list(merged.values())
+    with open(out, "w") as f:
+        json.dump(rows_out, f, indent=1)
+    print(f"\nwrote {len(rows)} rows ({len(rows_out)} total) to {out}")
+    if failures:
+        print(f"FAILED cells: {failures}")
+        return 1
+    print("all cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,108 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb microscope: compile one cell and attribute memory.
+
+    PYTHONPATH=src python -m repro.launch.inspect_cell --arch rwkv6-7b \\
+        --shape train_4k [--layers 2] [--act-shard d]
+
+Prints per-argument sharded sizes (catches unsharded params), the top
+HLO buffers, and the collective breakdown.
+"""
+import argparse
+import re
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--layers", type=int, default=0, help="override n_layers")
+    p.add_argument("--act-shard", default=None)
+    p.add_argument("--unroll", type=int, default=1)
+    p.add_argument("--top", type=int, default=12)
+    args = p.parse_args(argv)
+
+    from repro.configs import ARCHS, SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import analyze_compiled, collective_bytes
+    from repro.launch.steps import build_cell
+
+    cfg = ARCHS[args.arch]
+    if args.layers:
+        kw = {"n_layers": args.layers}
+        if cfg.family == "hybrid":
+            kw["n_layers"] = max(args.layers // cfg.shared_attn_every, 1) \
+                * cfg.shared_attn_every
+        cfg = cfg.replace(**kw)
+    if args.act_shard:
+        cfg = cfg.replace(act_shard=args.act_shard)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh()
+    cell = build_cell(cfg, shape, mesh, layer_unroll=args.unroll)
+
+    # ---- per-argument sharded bytes (top offenders) ----
+    print("== largest per-device argument shards ==")
+    entries = []
+
+    def visit(path, leaf, sh):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        nshards = sh.num_devices_sharded if hasattr(sh, "num_devices_sharded") else None
+        try:
+            frac = np.prod([leaf.shape[i] for i in range(len(leaf.shape))])
+            shard_shape = sh.shard_shape(leaf.shape)
+            per_dev = int(np.prod(shard_shape)) * leaf.dtype.itemsize
+        except Exception:
+            per_dev = nbytes
+        entries.append((per_dev, nbytes, jax.tree_util.keystr(path), str(sh.spec)))
+
+    for arg, shardings in zip(cell.args, cell.in_shardings):
+        flat, _ = jax.tree_util.tree_flatten_with_path(arg)
+        sflat = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        for (path, leaf), sh in zip(flat, sflat):
+            visit(path, leaf, sh)
+    entries.sort(reverse=True)
+    for per_dev, total, path, spec in entries[: args.top]:
+        print(f"  {per_dev / 2**20:10.1f} MiB/dev (total {total / 2**30:6.2f} GiB) "
+              f"{path}  spec={spec}")
+
+    # ---- compile ----
+    donate = (2,) if cell.kind in ("prefill", "decode") else (0, 1)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=donate)
+        compiled = jitted.lower(*cell.args).compile()
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    print(f"\n== compiled ==  temp={mem.temp_size_in_bytes / 2**30:.2f} GiB  "
+          f"args={mem.argument_size_in_bytes / 2**30:.2f} GiB  "
+          f"flops/dev={ca.get('flops', 0):.3e}  "
+          f"bytes/dev={ca.get('bytes accessed', 0):.3e}")
+
+    txt = compiled.as_text()
+    print("\n== top HLO buffer shapes ==")
+    pat = re.compile(r"(bf16|f32|f16|s32|u32|s8|pred)\[([\d,]+)\]")
+    sizes = {}
+    counts = {}
+    for m in pat.finditer(txt):
+        dims = [int(x) for x in m.group(2).split(",")]
+        byt = int(np.prod(dims)) * {"bf16": 2, "f16": 2, "f32": 4, "s32": 4,
+                                    "u32": 4, "s8": 1, "pred": 1}[m.group(1)]
+        key = f"{m.group(1)}[{m.group(2)}]"
+        sizes[key] = byt
+        counts[key] = counts.get(key, 0) + 1
+    for k, byt in sorted(sizes.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {byt / 2**20:10.1f} MiB  ×{counts[k]:3d}  {k}")
+
+    print("\n== collectives ==")
+    print("  ", collective_bytes(txt))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,122 @@
+"""Cell builder: (arch config × input shape × mesh) → a jit-able step
+function + abstract inputs + in_shardings. Shared by the dry-run, the
+roofline harness and the real drivers.
+
+Nothing here allocates device memory: params/optimizer/cache shapes come
+from ``jax.eval_shape`` and inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import sharding as shd
+from ..configs import Shape, input_specs
+from ..models import get_model
+from ..models.config import ModelConfig
+from ..train.optimizer import AdamWConfig, adamw_init
+from ..train.train_step import make_train_step
+
+__all__ = ["Cell", "build_cell"]
+
+_BIG_PARAMS = 10_000_000_000  # bf16 Adam moments above this (fits 16 GiB)
+
+
+@dataclass
+class Cell:
+    fn: Callable                 # jit-able step
+    args: Tuple[Any, ...]        # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any           # matches fn's output pytree (None = auto)
+    kind: str                    # train | prefill | decode
+    cfg: ModelConfig
+    shape: Shape
+
+
+def _opt_config(cfg: ModelConfig) -> AdamWConfig:
+    big = cfg.param_count() > _BIG_PARAMS
+    return AdamWConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def scan_trips(cfg: ModelConfig) -> int:
+    """Trip count of the (outer) layer scan — the extrapolation factor
+    for two-point cost analysis."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.shared_attn_every
+    return cfg.n_layers
+
+
+def build_cell(cfg: ModelConfig, shape: Shape, mesh: Mesh,
+               layer_unroll: int = 1) -> Cell:
+    """``layer_unroll`` sets the partial unroll factor of the layer scan;
+    the dry-run compiles u=1 and u=2 and extrapolates per-layer cost
+    (XLA cost analysis counts a scan body exactly once)."""
+    cfg = cfg.replace(layer_unroll=layer_unroll)
+    mod = get_model(cfg)
+    batch_abs = input_specs(cfg, shape)
+    if cfg.act_shard == "full_dp" and shape.global_batch % mesh.size == 0:
+        bspec = shd._filter_spec((shd.DP_AXES + (shd.TP_AXIS,),),
+                                 tuple(mesh.axis_names))
+        dp_div = mesh.size
+    else:
+        bspec = shd.batch_spec(mesh)
+        dp_div = _dp(mesh)
+    batch_shardings = {
+        k: NamedSharding(mesh, bspec if v.shape[0] % dp_div == 0
+                         else P())
+        for k, v in batch_abs.items()
+    }
+    params_abs = jax.eval_shape(
+        functools.partial(mod.init, cfg), jax.random.key(0))
+    params_sh = shd.param_shardings(params_abs, mesh)
+
+    if shape.kind == "train":
+        opt = _opt_config(cfg)
+        step = make_train_step(cfg, opt)
+        opt_abs = jax.eval_shape(
+            functools.partial(adamw_init, cfg=opt), params_abs)
+        opt_sh = {
+            "m": shd.param_shardings(opt_abs["m"], mesh),
+            "v": shd.param_shardings(opt_abs["v"], mesh),
+            "step": NamedSharding(mesh, P()),
+        }
+        # params/opt come back with their own shardings; metrics replicate
+        return Cell(step, (params_abs, opt_abs, batch_abs),
+                    (params_sh, opt_sh, batch_shardings),
+                    (params_sh, opt_sh, None),
+                    "train", cfg, shape)
+
+    b = shape.global_batch
+    # vlm prefill writes patch-prefix KV too; whisper/ssm caches ignore it
+    extra = cfg.n_patches if cfg.family == "vlm" else 0
+    cache_abs = jax.eval_shape(
+        lambda: mod.init_cache(cfg, b, shape.seq_len + extra))
+    cache_sh = shd.cache_shardings(cache_abs, mesh, b)
+
+    if shape.kind == "prefill":
+        def prefill(params, batch, cache):
+            return mod.prefill(params, batch, cfg, cache)
+        return Cell(prefill, (params_abs, batch_abs, cache_abs),
+                    (params_sh, batch_shardings, cache_sh),
+                    (None, cache_sh),   # cache stays sharded like the input
+                    "prefill", cfg, shape)
+
+    def decode(params, tokens, cache):
+        return mod.decode_step(params, tokens, cache, cfg)
+
+    tok_abs = batch_abs["tokens"]
+    tok_sh = batch_shardings["tokens"]
+    return Cell(decode, (params_abs, tok_abs, cache_abs),
+                (params_sh, tok_sh, cache_sh),
+                (None, cache_sh),
+                "decode", cfg, shape)
+
+
+def _dp(mesh: Mesh) -> int:
+    axes = tuple(mesh.axis_names)
+    return int(np.prod([mesh.shape[a] for a in shd.DP_AXES if a in axes])) or 1

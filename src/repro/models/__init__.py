@@ -1,0 +1,18 @@
+"""Model zoo: the 10 assigned architectures behind one functional API.
+
+Every family module exposes
+    init(cfg, key)                      -> params (nested dict pytree)
+    forward(params, batch, cfg)         -> logits          (training)
+    init_cache(cfg, batch, seq)         -> cache pytree    (serving)
+    prefill(params, tokens, cfg, cache) -> (logits, cache)
+    decode_step(params, toks, pos, cache, cfg) -> (logits, cache)
+
+Params are plain nested dicts of jnp arrays with layer-stacked leaves
+(leading dim = n_layers) so the trunk is a single ``lax.scan`` — HLO size
+stays independent of depth (the 94-layer MoE compiles as fast as the
+6-layer Whisper).
+"""
+try:  # registry imports all families; keep import-light during bring-up
+    from .registry import MODEL_FAMILIES, get_model  # noqa: F401
+except ImportError:  # pragma: no cover
+    pass

@@ -1,0 +1,159 @@
+"""Shared functional building blocks (no framework, plain pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dtype_of", "dense_init", "rms_norm", "layer_norm", "rope_tables",
+    "apply_rope", "gqa_attention", "gqa_attention_cached", "swiglu",
+    "stack_layers",
+]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 → (sin, cos) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, D); sin/cos: (..., S, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :] if x.ndim == sin.ndim + 2 else sin
+    c = cos[..., None, :] if x.ndim == cos.ndim + 2 else cos
+    # interleave-free (rotate-half) convention
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+_ATTN_CHUNK = 1024  # q-chunk for the scanned XLA path (bounds transients)
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, impl: str = "xla",
+                  bias=None):
+    """q: (B, S, H, D); k/v: (B, S, KV, D). Returns (B, S, H, D).
+
+    The XLA path scans over query chunks so the (B, H, S, S) logits
+    tensor never materializes — peak transient is (B, H, cq, S). This is
+    the flash-attention *memory* property without the kernel; the Pallas
+    kernel (impl="pallas") additionally gets the compute tiling right on
+    real TPUs.
+    """
+    from ..kernels import ops
+
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    if impl in ("pallas", "interpret") and bias is None:
+        out = ops.attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, impl=impl)
+        return out.transpose(0, 2, 1, 3)
+    group = h // kv
+
+    # g-major flat head layout: flat head h = g·KV + k. Under random init
+    # this is a free reparameterization (loading external checkpoints
+    # would permute wq/wo); it makes the *group* dim contiguous so TP can
+    # shard it when kv < tp (e.g. qwen3-moe 64h/4kv on a 16-way model
+    # axis) — see sharding.attn_logits_constrain.
+    def chunk_attn(q_chunk, q_off):
+        from ..sharding import attn_logits_constrain
+
+        cq = q_chunk.shape[1]
+        qg = q_chunk.reshape(b, cq, group, kv, d)
+        # dot in the activation dtype; upcast the logits (see
+        # gqa_attention_cached for why not preferred_element_type=f32)
+        logits = jnp.einsum("bqgkd,bskd->bgkqs", qg, k
+                            ).astype(jnp.float32) * (d ** -0.5)
+        logits = attn_logits_constrain(logits)
+        if bias is not None:
+            logits = logits + jax.lax.dynamic_slice_in_dim(
+                bias, q_off, cq, axis=-2) if bias.ndim >= 2 else logits + bias
+        if causal:
+            rows = q_off + jnp.arange(cq)[:, None]
+            cols = jnp.arange(s)[None, :]
+            logits = jnp.where((rows >= cols)[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgkqs,bskd->bqgkd", p.astype(v.dtype), v)
+        return out.reshape(b, cq, h, d)
+
+    if s <= _ATTN_CHUNK or s % _ATTN_CHUNK != 0:
+        return chunk_attn(q, 0)
+
+    nc = s // _ATTN_CHUNK
+    qc = q.reshape(b, nc, _ATTN_CHUNK, h, d)
+
+    def body(_, i):
+        return None, chunk_attn(qc[:, i], i * _ATTN_CHUNK)
+
+    # remat the chunk: without it the scan's backward saves each chunk's
+    # logits/softmax — the full S×S matrix in f32, exactly what chunking
+    # was avoiding (flash-backward recompute, in XLA form)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(body, None, jnp.arange(nc))   # (nc, B, cq, H, D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def gqa_attention_cached(q, k_cache, v_cache, cur_len):
+    """Single-position decode: q (B, 1, H, D) against a (B, Smax, KV, D)
+    cache; positions ≥ cur_len are masked. Returns (B, 1, H, D).
+
+    The QKᵀ dot runs in the cache dtype (bf16 in production): on TPU the
+    MXU accumulates f32 natively, while asking XLA:CPU for an f32 dot
+    output hoists an f32 *convert of the whole cache* out of the layer
+    loop (2.5× cache memory) — so the upcast happens on the (tiny)
+    logits instead."""
+    b, _, h, d = q.shape
+    kv = k_cache.shape[2]
+    group = h // kv
+    qg = q.reshape(b, group, kv, d)   # g-major, matching gqa_attention
+    logits = jnp.einsum("bgkd,bskd->bgks", qg, k_cache
+                        ).astype(jnp.float32) * (d ** -0.5)
+    pos = jnp.arange(k_cache.shape[1])
+    logits = jnp.where(pos[None, None, None] < cur_len, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgks,bskd->bgkd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def stack_layers(init_one, key, n_layers: int):
+    """Stack per-layer param trees along a new leading axis (scan layout)."""
+    keys = jax.random.split(key, n_layers)
+    trees = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)

@@ -1,0 +1,212 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) — arXiv:2404.05892.
+
+Per layer: time-mix (the WKV recurrence) + channel-mix. The WKV state is
+one (H, hd, hd) matrix per head, updated per token as
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+with data-dependent per-channel decay w_t = exp(−exp(wx_t)) (the Finch
+contribution; we implement the decay projection without the paper's
+low-rank LoRA factorization — noted in DESIGN.md). Training runs the
+recurrence with ``lax.scan`` over time (a chunked block-parallel form is
+a §Perf candidate); decode carries the state — O(1) per token, which is
+what qualifies this arch for the 500k-token long-context shape.
+
+Token-shift mixes x_{t-1} into the projections (standard RWKV); the
+shift uses ``jnp.roll``+zero for training and the cached last-x for
+decode.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import act_constrain, constrain
+from .config import ModelConfig
+from .layers import dense_init, dtype_of, rms_norm, stack_layers
+
+__all__ = ["init", "forward", "init_cache", "prefill", "decode_step"]
+
+
+def _init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    f = cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    return {
+        "ln_tm": jnp.ones((d,), dt),
+        # token-shift mix coefficients per projection
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "w_r": dense_init(ks[0], (d, d), dt),
+        "w_k": dense_init(ks[1], (d, d), dt),
+        "w_v": dense_init(ks[2], (d, d), dt),
+        "w_g": dense_init(ks[3], (d, d), dt),
+        "w_decay": dense_init(ks[4], (d, d), dt, scale=0.01),
+        "w_decay_b": jnp.full((d,), -6.0, dt),   # exp(-exp(-6)) ≈ slow decay
+        "u_bonus": jnp.zeros((cfg.n_heads, cfg.hd), dt),
+        "ln_x": jnp.ones((d,), dt),              # per-head group norm approx
+        "w_wkv_out": dense_init(ks[5], (d, d), dt),
+        "ln_cm": jnp.ones((d,), dt),
+        "mu_ck": jnp.full((d,), 0.5, dt),
+        "cm_k": dense_init(ks[6], (d, f), dt),
+        "cm_v": dense_init(ks[7], (f, d), dt),
+        "cm_r": dense_init(ks[8], (d, d), dt),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    return {
+        "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "layers": stack_layers(lambda k: _init_layer(k, cfg), k_layers, cfg.n_layers),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "head": dense_init(k_head, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def _shift(x, last=None):
+    """x: (B, S, d) → x_{t-1} (zero / cached at t=0)."""
+    prev = jnp.roll(x, 1, axis=1)
+    init = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return prev.at[:, 0].set(init[:, 0])
+
+
+_WKV_CHUNK = 256
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r/k/v: (B, S, H, hd); w: (B, S, H, hd) decay in (0,1);
+    u: (H, hd) bonus. state: (B, H, hd, hd) f32. Returns (y, state).
+
+    Two-level scan with rematted chunks: a flat time scan's backward
+    saves the (B, H, hd, hd) state at EVERY step — ~86 GB/layer at the
+    train_4k cell. Chunking saves only S/256 boundary states and
+    recomputes inside the chunk (the standard linear-RNN training
+    memory/compute trade)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # (B, H, hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)  # outer product
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       s.astype(rt.dtype) + u[None, :, :, None] * kv)
+        s = wt.astype(s.dtype)[..., None] * s + kv.astype(s.dtype)
+        return s, y
+
+    seq = r.shape[1]
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))  # (S, B, H, hd)
+    if seq <= _WKV_CHUNK or seq % _WKV_CHUNK:
+        state, ys = jax.lax.scan(step, state, xs)
+        return ys.transpose(1, 0, 2, 3), state    # (B, S, H, hd)
+
+    nc = seq // _WKV_CHUNK
+    xs_c = tuple(t.reshape((nc, _WKV_CHUNK) + t.shape[1:]) for t in xs)
+
+    def chunk(s, inp):
+        return jax.lax.scan(step, s, inp)
+
+    chunk = jax.checkpoint(chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    state, ys = jax.lax.scan(chunk, state, xs_c)
+    ys = ys.reshape((seq,) + ys.shape[2:])
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def _time_mix(p, x, cfg: ModelConfig, state, last_x):
+    b, s, d = x.shape
+    h_, hd = cfg.n_heads, cfg.hd
+    xs = _shift(x, last_x)
+    mix = lambda mu: x * mu + xs * (1 - mu)
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["w_v"])
+    g = jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["w_g"])
+    wx = jnp.einsum("bsd,de->bse", mix(p["mu_w"]), p["w_decay"]) + p["w_decay_b"]
+    w = jnp.exp(-jnp.exp(wx.astype(jnp.float32))).astype(x.dtype)
+    shp = (b, s, h_, hd)
+    y, state = _wkv_scan(r.reshape(shp), k.reshape(shp), v.reshape(shp),
+                         w.reshape(shp), p["u_bonus"], state)
+    y = y.astype(x.dtype)   # keep the layer carry in the compute dtype
+    y = rms_norm(y.reshape(b, s, d), p["ln_x"], cfg.rms_eps)
+    y = y * jax.nn.silu(g)
+    return jnp.einsum("bsd,de->bse", y, p["w_wkv_out"]), state, x[:, -1]
+
+
+def _channel_mix(p, x, cfg: ModelConfig, last_x):
+    xs = _shift(x, last_x)
+    xk = x * p["mu_ck"] + xs * (1 - p["mu_ck"])
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm_k"])
+    kv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)), p["cm_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xk, p["cm_r"]))
+    return r * kv, x[:, -1]
+
+
+def _layer(x, p, cfg: ModelConfig, state, last_tm, last_cm):
+    h = rms_norm(x, p["ln_tm"], cfg.rms_eps)
+    y, state, new_tm = _time_mix(p, h, cfg, state, last_tm)
+    x = act_constrain(x + y, cfg.act_shard)
+    h = rms_norm(x, p["ln_cm"], cfg.rms_eps)
+    y, new_cm = _channel_mix(p, h, cfg, last_cm)
+    return act_constrain(x + y, cfg.act_shard), state, new_tm, new_cm
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    """RWKV cache is O(1) in sequence length: the WKV state + the two
+    token-shift last-x vectors, per layer."""
+    del max_len
+    dt = dtype_of(cfg.compute_dtype)
+    L, b, d = cfg.n_layers, batch_size, cfg.d_model
+    return {
+        "wkv": jnp.zeros((L, b, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32),
+        "tm_x": jnp.zeros((L, b, d), dt),
+        "cm_x": jnp.zeros((L, b, d), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _trunk(params, h, cfg: ModelConfig, cache):
+    def body(carry, inp):
+        x = carry
+        p, st, ltm, lcm = inp
+        x, st, ntm, ncm = _layer(x, p, cfg, st, ltm, lcm)
+        return x, (st, ntm, ncm)
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (st, tm, cm) = jax.lax.scan(
+        body_fn, h,
+        (params["layers"], cache["wkv"], cache["tm_x"], cache["cm_x"]),
+        unroll=cfg.scan_unroll(cfg.n_layers))
+    return h, {"wkv": st, "tm_x": tm, "cm_x": cm,
+               "pos": cache["pos"] + h.shape[1]}
+
+
+def forward(params, batch, cfg: ModelConfig):
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(dt)
+    cache = init_cache(cfg, h.shape[0], 0)
+    h, _ = _trunk(params, h, cfg, cache)
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype))
+
+
+def prefill(params, batch, cfg: ModelConfig, cache):
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(dt)
+    h, cache = _trunk(params, h, cfg, cache)
+    h = rms_norm(h[:, -1:], params["ln_f"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype)), cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][tokens].astype(dt)    # (B, 1, d)
+    h, cache = _trunk(params, h, cfg, cache)
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype)), cache

@@ -1,0 +1,216 @@
+"""Dense GQA transformer trunk (llama3 / qwen3 / qwen1.5 / smollm /
+phi-3-vision backbone).
+
+Layer-stacked params + ``lax.scan`` over layers; optional
+``jax.checkpoint`` remat around the scanned body; (train, prefill,
+decode) triple with a functional KV cache.
+
+The VLM variant (phi-3-vision) prepends ``n_patches`` precomputed patch
+embeddings (the stubbed CLIP frontend per the assignment) to the token
+embeddings; everything downstream is the same trunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import act_constrain, constrain
+from .config import ModelConfig
+from .layers import (apply_rope, dense_init, dtype_of, gqa_attention,
+                     gqa_attention_cached, rms_norm, rope_tables,
+                     stack_layers, swiglu)
+
+__all__ = ["init", "forward", "init_cache", "prefill", "decode_step"]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig):
+    d, hd, h, kv, f = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln_attn": jnp.ones((d,), dt),
+        "wq": dense_init(ks[0], (d, h * hd), dt),
+        "wk": dense_init(ks[1], (d, kv * hd), dt),
+        "wv": dense_init(ks[2], (d, kv * hd), dt),
+        "wo": dense_init(ks[3], (h * hd, d), dt),
+        "ln_mlp": jnp.ones((d,), dt),
+        "w_gate": dense_init(ks[4], (d, f), dt),
+        "w_up": dense_init(ks[5], (d, f), dt),
+        "w_down": dense_init(ks[6], (f, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    k_emb, k_layers, k_head, k_vis = jax.random.split(key, 4)
+    params = {
+        "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "layers": stack_layers(lambda k: _init_layer(k, cfg), k_layers, cfg.n_layers),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab), dt)
+    if cfg.family == "vlm":
+        # stub frontend: a single projection of precomputed patch embeds
+        params["vis_proj"] = dense_init(k_vis, (cfg.d_model, cfg.d_model), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+def _qkv(p, cfg: ModelConfig, x):
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    return q, k, v
+
+
+def _layer(x, p, cfg: ModelConfig, sin, cos):
+    h = rms_norm(x, p["ln_attn"], cfg.rms_eps)
+    q, k, v = _qkv(p, cfg, h)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    attn = gqa_attention(q, k, v, causal=True, impl=cfg.attn_impl)
+    b, s, _, _ = attn.shape
+    x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(b, s, -1), p["wo"])
+    x = act_constrain(x, cfg.act_shard)
+    h = rms_norm(x, p["ln_mlp"], cfg.rms_eps)
+    x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return act_constrain(x, cfg.act_shard), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(dt)
+    if cfg.family == "vlm":
+        vis = jnp.einsum("bpd,de->bpe", batch["patches"].astype(dt),
+                         params["vis_proj"].astype(dt))
+        h = jnp.concatenate([vis, h], axis=1)
+    return h
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """batch: tokens (B, S) [+ patches (B, Np, d) for vlm] → logits."""
+    h = _embed_inputs(params, batch, cfg)
+    s_total = h.shape[1]
+    pos = jnp.arange(s_total, dtype=jnp.int32)
+    sin, cos = rope_tables(pos, cfg.hd, cfg.rope_theta)
+
+    def body(x, p):
+        y, _ = _layer(x, p, cfg, sin, cos)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll(cfg.n_layers))
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    if cfg.family == "vlm":
+        h = h[:, -batch["tokens"].shape[1]:]
+    return _lm_head(params, h)
+
+
+def _lm_head(params, h):
+    """Logits; tied embeddings avoid materializing a transposed copy."""
+    if "head" in params:
+        return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype))
+    return jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    dt = dtype_of(cfg.compute_dtype)
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ModelConfig, cache):
+    """Run the prompt through the trunk, writing the KV cache. Returns
+    (logits of the last position, cache)."""
+    h = _embed_inputs(params, batch, cfg)
+    s = h.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    sin, cos = rope_tables(pos, cfg.hd, cfg.rope_theta)
+
+    def body(x, p):
+        y, (k, v) = _layer(x, p, cfg, sin, cos)
+        return y, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (ks, vs) = jax.lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll(cfg.n_layers))
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    h = rms_norm(h[:, -1:], params["ln_f"], cfg.rms_eps)
+    return _lm_head(params, h), cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    """tokens: (B, 1) — one new token per sequence; attends to
+    cache[:pos+1]. Returns (logits (B, 1, V), updated cache)."""
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][tokens].astype(dt)            # (B, 1, d)
+    pos = cache["pos"]
+    sin, cos = rope_tables(pos[None], cfg.hd, cfg.rope_theta)  # (1, hd/2)
+
+    def body(x, inp):
+        p, k_cache, v_cache = inp
+        hh = rms_norm(x, p["ln_attn"], cfg.rms_eps)
+        q, k, v = _qkv(p, cfg, hh)                    # (B, 1, ·, hd)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        attn = gqa_attention_cached(q, k_cache, v_cache, pos + 1)
+        b = attn.shape[0]
+        x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(b, 1, -1), p["wo"])
+        hh = rms_norm(x, p["ln_mlp"], cfg.rms_eps)
+        x = x + swiglu(hh, p["w_gate"], p["w_up"], p["w_down"])
+        return x, (k_cache, v_cache)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]),
+                               unroll=cfg.scan_unroll(cfg.n_layers))
+    cache = {"k": ks, "v": vs, "pos": pos + 1}
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    return _lm_head(params, h), cache

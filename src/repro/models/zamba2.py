@@ -1,0 +1,296 @@
+"""Zamba2 hybrid: Mamba2 (SSD) backbone + one *shared* attention block
+applied every ``shared_attn_every`` layers — arXiv:2411.15242.
+
+Mamba2 layer (state-space duality, scalar-per-head A):
+    xBC = causal_conv1d(in_proj_x(x))           (kernel 4, depthwise)
+    h_t = exp(−Δ_t·exp(A_log)) · h_{t−1} + Δ_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D · x_t ;  out = out_proj(y · silu(z))
+State per head: (head_dim, d_state) → decode is O(1) in context length,
+which qualifies the arch for the 500k long-context shape.
+
+The shared transformer block reuses ONE parameter set at every
+application (Zamba's weight-sharing trick; we omit the paper's per-
+invocation LoRA deltas and the concat-with-embedding input — recorded in
+DESIGN.md §Assumptions). Structure: scan over ``n_layers/every`` super-
+blocks; each = inner scan over ``every`` mamba layers + the shared attn.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import act_constrain, constrain
+from .config import ModelConfig
+from .layers import (apply_rope, dense_init, dtype_of, gqa_attention,
+                     gqa_attention_cached, rms_norm, rope_tables,
+                     stack_layers, swiglu)
+
+__all__ = ["init", "forward", "init_cache", "prefill", "decode_step"]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer
+# ---------------------------------------------------------------------------
+
+def _init_mamba(key, cfg: ModelConfig):
+    d, di, ds = cfg.d_model, cfg.inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    kconv = cfg.conv_kernel
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    d_xbc = di + 2 * ds                     # x, B, C share the conv
+    return {
+        "ln": jnp.ones((d,), dt),
+        "in_proj": dense_init(ks[0], (d, d_xbc + di + nh), dt),
+        "conv_w": dense_init(ks[1], (d_xbc, kconv), dt, scale=0.5),
+        "conv_b": jnp.zeros((d_xbc,), dt),
+        "A_log": jnp.zeros((nh,), dt),      # A = -exp(A_log) ≈ -1
+        "D": jnp.ones((nh,), dt),
+        "dt_bias": jnp.full((nh,), -2.0, dt),
+        "out_proj": dense_init(ks[2], (di, d), dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, C) depthwise causal conv, kernel K. state: (B, K-1, C)
+    prior context (decode). Returns (y, new_state)."""
+    bsz, s, c = x.shape
+    k = w.shape[1]
+    pad = jnp.zeros((bsz, k - 1, c), x.dtype) if state is None else state
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    cols = [xp[:, i:i + s, :] * w[:, i] for i in range(k)]
+    y = sum(cols) + b
+    return jax.nn.silu(y), xp[:, -(k - 1):, :]
+
+
+_SSD_CHUNK = 256
+
+
+def _ssd_scan(xh, bmat, cmat, dt_, a, state):
+    """xh: (B,S,H,hd); bmat/cmat: (B,S,ds); dt_: (B,S,H); a: (H,) <0;
+    state: (B,H,hd,ds) f32. Single-group SSD recurrence.
+
+    Chunked + rematted like rwkv6._wkv_scan: a flat scan's backward
+    saves the (B,H,hd,ds) state at every one of S steps; chunking keeps
+    only S/256 boundary states and recomputes within chunks."""
+
+    def step(s_, inp):
+        xt, bt, ct, dtt = inp                       # (B,H,hd),(B,ds),(B,ds),(B,H)
+        decay = jnp.exp(dtt * a)                    # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        s_ = s_ * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", s_.astype(ct.dtype), ct)
+        return s_, y
+
+    seq = xh.shape[1]
+    xs = (xh.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2), dt_.transpose(1, 0, 2))
+    if seq <= _SSD_CHUNK or seq % _SSD_CHUNK:
+        state, ys = jax.lax.scan(step, state, xs)
+        return ys.transpose(1, 0, 2, 3), state
+
+    nc = seq // _SSD_CHUNK
+    xs_c = tuple(t.reshape((nc, _SSD_CHUNK) + t.shape[1:]) for t in xs)
+
+    def chunk(s_, inp):
+        return jax.lax.scan(step, s_, inp)
+
+    chunk = jax.checkpoint(chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    state, ys = jax.lax.scan(chunk, state, xs_c)
+    ys = ys.reshape((seq,) + ys.shape[2:])
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def _mamba_layer(x, p, cfg: ModelConfig, ssm_state, conv_state):
+    b, s, d = x.shape
+    di, ds = cfg.inner, cfg.ssm_state
+    nh, hd = di // cfg.ssm_head_dim, cfg.ssm_head_dim
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    xbc, z, dt_raw = jnp.split(zxbcdt, [di + 2 * ds, 2 * di + 2 * ds], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + ds], axis=-1)
+    dt_ = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, s, nh, hd)
+    # recurrence state stays f32; streams stay in the compute dtype
+    y, ssm_state = _ssd_scan(xh, bmat, cmat, dt_, a, ssm_state)
+    y = y.astype(x.dtype) + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, di) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return act_constrain(x + out, cfg.act_shard), ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig):
+    d, hd, h_, kv, f = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln_attn": jnp.ones((d,), dt),
+        "wq": dense_init(ks[0], (d, h_ * hd), dt),
+        "wk": dense_init(ks[1], (d, kv * hd), dt),
+        "wv": dense_init(ks[2], (d, kv * hd), dt),
+        "wo": dense_init(ks[3], (h_ * hd, d), dt),
+        "ln_mlp": jnp.ones((d,), dt),
+        "w_gate": dense_init(ks[4], (d, f), dt),
+        "w_up": dense_init(ks[5], (d, f), dt),
+        "w_down": dense_init(ks[6], (f, d), dt),
+    }
+
+
+def _attn_block(x, p, cfg: ModelConfig, sin, cos):
+    b, s, _ = x.shape
+    h = rms_norm(x, p["ln_attn"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    attn = gqa_attention(q, k, v, causal=True, impl=cfg.attn_impl)
+    x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(b, s, -1), p["wo"])
+    h = rms_norm(x, p["ln_mlp"], cfg.rms_eps)
+    x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return act_constrain(x, cfg.act_shard), (k, v)
+
+
+def _attn_block_decode(x, p, cfg: ModelConfig, sin, cos, k_cache, v_cache, pos):
+    b = x.shape[0]
+    h = rms_norm(x, p["ln_attn"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+    q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    attn = gqa_attention_cached(q, k_cache, v_cache, pos + 1)
+    x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(b, 1, -1), p["wo"])
+    h = rms_norm(x, p["ln_mlp"], cfg.rms_eps)
+    x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _n_super(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init(cfg: ModelConfig, key) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    k_emb, k_blocks, k_attn, k_head = jax.random.split(key, 4)
+    n_sup, every = _n_super(cfg), cfg.shared_attn_every
+    flat = stack_layers(lambda k: _init_mamba(k, cfg), k_blocks, cfg.n_layers)
+    blocks = jax.tree.map(
+        lambda x: x.reshape((n_sup, every) + x.shape[1:]), flat)
+    return {
+        "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "blocks": blocks,                       # (n_super, every, ...)
+        "shared_attn": _init_attn(k_attn, cfg),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "head": dense_init(k_head, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    dt = dtype_of(cfg.compute_dtype)
+    di, ds = cfg.inner, cfg.ssm_state
+    nh, hd = di // cfg.ssm_head_dim, cfg.ssm_head_dim
+    n_sup, every = _n_super(cfg), cfg.shared_attn_every
+    return {
+        "ssm": jnp.zeros((n_sup, every, batch_size, nh, hd, ds), jnp.float32),
+        "conv": jnp.zeros((n_sup, every, batch_size, cfg.conv_kernel - 1,
+                           di + 2 * ds), dt),
+        "k": jnp.zeros((n_sup, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((n_sup, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _trunk(params, h, cfg: ModelConfig, cache, sin, cos):
+    def inner(x, inp):
+        p, st, cv = inp
+        x, st, cv = _mamba_layer(x, p, cfg, st, cv)
+        return x, (st, cv)
+
+    def super_block(x, inp):
+        p_m, st, cv = inp
+        x, (st, cv) = jax.lax.scan(inner, x, (p_m, st, cv),
+                                   unroll=cfg.shared_attn_every)
+        x, (k, v) = _attn_block(x, params["shared_attn"], cfg, sin, cos)
+        return x, (st, cv, k, v)
+
+    body = super_block
+    if cfg.remat:
+        body = jax.checkpoint(
+            super_block, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (ssm, conv, ks, vs) = jax.lax.scan(
+        body, h, (params["blocks"], cache["ssm"], cache["conv"]),
+        unroll=cfg.scan_unroll(_n_super(cfg)))
+    return h, ssm, conv, ks, vs
+
+
+def forward(params, batch, cfg: ModelConfig):
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(dt)
+    b, s = batch["tokens"].shape
+    sin, cos = rope_tables(jnp.arange(s, dtype=jnp.int32), cfg.hd, cfg.rope_theta)
+    cache = init_cache(cfg, b, 0)
+    h, *_ = _trunk(params, h, cfg, cache, sin, cos)
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype))
+
+
+def prefill(params, batch, cfg: ModelConfig, cache):
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(dt)
+    s = batch["tokens"].shape[1]
+    sin, cos = rope_tables(jnp.arange(s, dtype=jnp.int32), cfg.hd, cfg.rope_theta)
+    h, ssm, conv, ks, vs = _trunk(params, h, cfg, cache, sin, cos)
+    cache = dict(cache)
+    cache["ssm"], cache["conv"] = ssm, conv
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    h = rms_norm(h[:, -1:], params["ln_f"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype)), cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    dt = dtype_of(cfg.compute_dtype)
+    h = params["embed"][tokens].astype(dt)
+    pos = cache["pos"]
+    sin, cos = rope_tables(pos[None], cfg.hd, cfg.rope_theta)
+
+    def inner(x, inp):
+        p, st, cv = inp
+        x, st, cv = _mamba_layer(x, p, cfg, st, cv)
+        return x, (st, cv)
+
+    def super_block(x, inp):
+        p_m, st, cv, kc, vc = inp
+        x, (st, cv) = jax.lax.scan(inner, x, (p_m, st, cv),
+                                   unroll=cfg.shared_attn_every)
+        x, kc, vc = _attn_block_decode(
+            x, params["shared_attn"], cfg, sin, cos, kc, vc, pos)
+        return x, (st, cv, kc, vc)
+
+    h, (ssm, conv, ks, vs) = jax.lax.scan(
+        super_block, h,
+        (params["blocks"], cache["ssm"], cache["conv"], cache["k"], cache["v"]),
+        unroll=cfg.scan_unroll(_n_super(cfg)))
+    cache = {"ssm": ssm, "conv": conv, "k": ks, "v": vs, "pos": pos + 1}
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype)), cache

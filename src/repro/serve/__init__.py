@@ -1,0 +1,1 @@
+from .decode import generate, make_decode_step, make_prefill  # noqa: F401

@@ -1,0 +1,72 @@
+"""Serving: batched prefill + autoregressive decode.
+
+``serve_step`` for the dry-run shapes is exactly ``make_decode_step``'s
+returned function: one new token per sequence against a seq_len KV cache
+(decode_32k / long_500k cells) — NOT a train_step. ``generate`` wraps
+prefill + a ``lax.scan`` of decode steps for the examples/smoke tests
+(greedy or temperature sampling).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import get_model
+from ..models.config import ModelConfig
+
+__all__ = ["make_prefill", "make_decode_step", "generate"]
+
+
+def make_prefill(cfg: ModelConfig) -> Callable:
+    mod = get_model(cfg)
+
+    def prefill(params, batch, cache):
+        return mod.prefill(params, batch, cfg, cache)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    mod = get_model(cfg)
+
+    def decode_step(params, tokens, cache):
+        return mod.decode_step(params, tokens, cache, cfg)
+
+    return decode_step
+
+
+def generate(params, cfg: ModelConfig, batch: Dict, max_new_tokens: int,
+             temperature: float = 0.0, key=None,
+             cache_len: Optional[int] = None) -> jnp.ndarray:
+    """Greedy/temperature generation. batch must contain 'tokens' (B, S)
+    (+ modality extras). Returns (B, max_new_tokens) int32."""
+    mod = get_model(cfg)
+    b, s = batch["tokens"].shape
+    prefix = cfg.n_patches if cfg.family == "vlm" else 0  # prefill writes it
+    cache = mod.init_cache(cfg, b, cache_len or (s + prefix + max_new_tokens))
+    logits, cache = mod.prefill(params, batch, cfg, cache)
+    if key is None:
+        key = jax.random.key(0)
+
+    def sample(logits, k):
+        if temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            k, logits[:, -1].astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+
+    tok0 = sample(logits, key)
+
+    def step(carry, k):
+        tok, cache = carry
+        logits, cache = mod.decode_step(params, tok[:, None], cache, cfg)
+        nxt = sample(logits, k)
+        return (nxt, cache), tok
+
+    keys = jax.random.split(key, max_new_tokens)
+    (last, _), toks = jax.lax.scan(step, (tok0, cache), keys)
+    out = jnp.concatenate([toks.T, last[:, None]], axis=1)  # (B, T+1)
+    return out[:, :max_new_tokens]

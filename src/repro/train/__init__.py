@@ -1,0 +1,2 @@
+from .optimizer import adamw_init, adamw_update, global_norm  # noqa: F401
+from .train_step import loss_fn, make_train_step  # noqa: F401

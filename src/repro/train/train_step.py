@@ -1,0 +1,58 @@
+"""Training step factory: loss, grads, AdamW update — one jit-able pure
+function per (model, optimizer) pair."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import get_model
+from ..models.config import ModelConfig
+from ..sharding import constrain
+from .optimizer import AdamWConfig, adamw_update, cosine_lr
+
+__all__ = ["loss_fn", "make_train_step"]
+
+
+def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
+    """Next-token cross entropy (labels = batch['labels'], −100 ignored)
+    + MoE router auxiliary loss where applicable."""
+    mod = get_model(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        logits, aux = mod.forward(params, batch, cfg, return_aux=True)
+    else:
+        logits = mod.forward(params, batch, cfg)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, logz - gold, 0.0)
+    denom = jnp.maximum(valid.sum(), 1)
+    xent = nll.sum() / denom
+    return xent + aux_weight * aux, {"xent": xent, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig = AdamWConfig(),
+                    total_steps: int = 10_000) -> Callable:
+    """Returns step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    Data parallelism comes from sharded inputs (pjit); no explicit pmean —
+    XLA inserts the gradient all-reduce from the sharding constraints.
+    """
+
+    def step(params, opt_state, batch):
+        batch = {k: constrain(v, ("pod", "data")) for k, v in batch.items()}
+        (loss, stats), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        lr = cosine_lr(opt_state["step"], peak=opt.lr, total=total_steps)
+        params, opt_state, opt_stats = adamw_update(
+            grads, opt_state, params, opt, lr=lr)
+        metrics = {"loss": loss, "lr": lr, **stats, **opt_stats}
+        return params, opt_state, metrics
+
+    return step

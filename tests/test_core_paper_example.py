@@ -1,0 +1,222 @@
+"""The paper's running example (Figs. 3-7) as ground truth.
+
+Reconstruction of Fig. 3 from the paper's own printed numbers (the figure
+itself is an image we cannot read, but the text pins it down):
+
+  * 14 entities A-O (J unused), two partitions of 7 (§III-B).
+  * P = 20 pairs; largest block z has 5 entities (35% of 14) and 10 pairs
+    (50% of 20) (§III-B).
+  * Block order w,x,y,z = Φ0..Φ3 ("we assign the first block (key w) to
+    block index position 0").
+  * "the index for pair (2,3) of block Φ0 equals 5" → c(2,3,N0)=5 → N0=4,
+    so |w| = 4.
+  * BlockSplit task ordering "0.*, 3.0×1, 2.*, 3.1, 1.*, 3.0" (§IV) with
+    task sizes descending forces |Φ2|=|y|=3 (3 pairs) and |Φ1|=|x|=2
+    (1 pair): sizes (4,2,3,5) → pairs (6,1,3,10), Σ=20. ✓
+  * "Π0 and Π1 contain 2 and 3 entities" of z (§IV); Φ3 = {F,G,M,N,O}
+    with M "the third entity of Φ3" → F,G ∈ Π0; M,N,O ∈ Π1 (§V, Fig. 7).
+  * M's pairs print as 11, 14, 17, 18 and ranges ℜ0=[0,6], ℜ1=[7,13],
+    ℜ2=[14,19] — all reproduced exactly below with o = [0,6,7,10].
+
+The per-partition splits of w, x, y are not printed; we use the unique
+choice consistent with 7 + 7 entities: w=[2,2], x=[1,1], y=[2,1].
+Everything asserted below is a number printed in the paper's text.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    compute_bdm, entity_indices, blocked_layout,
+    plan_basic, plan_block_split, plan_pair_range,
+    pairs_of_range, entity_range_matrix, enumeration as en,
+)
+
+BLOCK_OF = dict(w=0, x=1, y=2, z=3)  # Φ0..Φ3 (Fig. 4 row order)
+P0 = ["A.w", "B.x", "C.y", "D.w", "E.y", "F.z", "G.z"]
+P1 = ["H.w", "I.x", "K.y", "L.w", "M.z", "N.z", "O.z"]
+
+
+def example():
+    names, blocks, parts = [], [], []
+    for pidx, part in enumerate([P0, P1]):
+        for item in part:
+            name, key = item.split(".")
+            names.append(name)
+            blocks.append(BLOCK_OF[key])
+            parts.append(pidx)
+    return names, np.array(blocks), np.array(parts)
+
+
+def test_bdm_matches_paper():
+    _, blocks, parts = example()
+    bdm = compute_bdm(blocks, parts, 4, 2)
+    # §IV: z has 2 entities in Π0 and 3 in Π1 → row [2, 3]; "outputs
+    # [z,1,3] because there are 3 entities in the second partition".
+    expected = np.array([[2, 2], [1, 1], [2, 1], [2, 3]])
+    np.testing.assert_array_equal(bdm, expected)
+    np.testing.assert_array_equal(bdm.sum(axis=1), [4, 2, 3, 5])
+
+
+def test_block_pair_counts():
+    _, blocks, parts = example()
+    bdm = compute_bdm(blocks, parts, 4, 2)
+    sizes = bdm.sum(axis=1)
+    pairs = en.block_pair_counts(sizes)
+    # §III-B: block sizes 2..5; pair counts 1..10; z = 50% of P=20 pairs
+    # while holding only 35% (5/14) of entities.
+    np.testing.assert_array_equal(sizes, [4, 2, 3, 5])
+    np.testing.assert_array_equal(pairs, [6, 1, 3, 10])
+    assert pairs.sum() == 20
+    assert pairs.max() / pairs.sum() == 0.5
+    assert sizes.max() / sizes.sum() == pytest.approx(5 / 14)
+
+
+def test_entity_indices_match_fig6():
+    names, blocks, parts = example()
+    bdm = compute_bdm(blocks, parts, 4, 2)
+    idx = entity_indices(blocks, parts, bdm)
+    by_name = dict(zip(names, idx))
+    # §V: "M is the first entity of block Φ3 in partition Π1 ... there are
+    # two other entities in Φ3 in the preceding partition Π0 → M is the
+    # third entity of Φ3 and is thus assigned entity index 2."
+    assert by_name["M"] == 2
+    assert by_name["F"] == 0 and by_name["G"] == 1
+    assert by_name["N"] == 3 and by_name["O"] == 4
+    # Blocks enumerate partition-major: A, D (Π0) then H, L (Π1).
+    assert by_name["A"] == 0 and by_name["D"] == 1
+    assert by_name["H"] == 2 and by_name["L"] == 3
+
+
+def test_cell_index_fig6_values():
+    # "the index for pair (2,3) of block Φ0 equals 5": c(2,3,4) = 5.
+    assert en.cell_index(2, 3, 4) == 5
+    # M (§V): N=5, x=2 → p_min = c(0,2,5)+o(3) = 1+10 = 11,
+    # p_max = c(2,4,5)+o(3) = 8+10 = 18. Paper prints exactly 11 and 18.
+    assert en.cell_index(0, 2, 5) == 1
+    assert en.cell_index(2, 4, 5) == 8
+
+
+def test_pair_offsets_and_m_pairs():
+    sizes = np.array([4, 2, 3, 5], np.int64)
+    pairs = en.block_pair_counts(sizes)
+    offsets, total = en.pair_offsets(pairs)
+    assert total == 20  # "we have P = 20 pairs"
+    np.testing.assert_array_equal(offsets, [0, 6, 7, 10])
+    # M takes part in pairs 11, 14, 17, 18 (§V, Fig. 7).
+    blk = np.int64(3)
+    m_pairs = [int(en.pair_index(blk, np.int64(x), np.int64(y), sizes, offsets))
+               for x, y in [(0, 2), (1, 2), (2, 3), (2, 4)]]
+    assert m_pairs == [11, 14, 17, 18]
+
+
+def test_pair_index_roundtrip_paper_world():
+    sizes = np.array([4, 2, 3, 5], np.int64)
+    offsets, total = en.pair_offsets(en.block_pair_counts(sizes))
+    p = np.arange(total, dtype=np.int64)
+    blk, x, y = en.invert_pair_index(p, sizes, offsets)
+    p2 = en.pair_index(blk, x, y, sizes, offsets)
+    np.testing.assert_array_equal(p, p2)
+    assert (x < y).all()
+    assert (y < sizes[blk]).all()
+
+
+def test_pair_ranges_fig7():
+    sizes = np.array([4, 2, 3, 5], np.int64)
+    _, total = en.pair_offsets(en.block_pair_counts(sizes))
+    bounds = en.range_bounds(total, 3)
+    # "ℜ0 = [0,6], ℜ1 = [7,13], ℜ2 = [14,19]" (inclusive in the paper).
+    np.testing.assert_array_equal(bounds, [[0, 7], [7, 14], [14, 20]])
+
+
+def test_block_split_fig5():
+    """Fig. 5: only Φ3 (z) splits; match tasks 3.0 (1 pair), 3.0×1 (6),
+    3.1 (3); ordering 0.*, 3.0×1, 2.*, 3.1, 1.*, 3.0; 19 kv-pairs emitted;
+    'each reduce task has to process between six and seven comparisons'."""
+    _, blocks, parts = example()
+    bdm = compute_bdm(blocks, parts, 4, 2)
+    plan = plan_block_split(bdm, r=3)
+    assert plan.total_pairs == 20
+    # avg = 20/3 ≈ 6.67; only z (10 pairs) exceeds it.
+    np.testing.assert_array_equal(plan.split_mask, [False, False, False, True])
+
+    tasks = {}
+    for t in range(plan.task_block.shape[0]):
+        key = (int(plan.task_block[t]), int(plan.task_i[t]), int(plan.task_j[t]))
+        tasks[key] = int(plan.task_pairs[t])
+    assert tasks[(3, 0, 0)] == 1    # 3.0: sub-block of 2 entities
+    assert tasks[(3, 1, 0)] == 6    # 3.0×1: 2*3
+    assert tasks[(3, 1, 1)] == 3    # 3.1: sub-block of 3 entities
+    assert tasks[(0, -1, -1)] == 6  # 0.*
+    assert tasks[(1, -1, -1)] == 1  # 1.*
+    assert tasks[(2, -1, -1)] == 3  # 2.*
+
+    # Descending task order matches the paper's print:
+    # 0.*(6), 3.0×1(6), 2.*(3), 3.1(3), 1.*(1), 3.0(1).
+    order = np.argsort(-plan.task_pairs, kind="stable")
+    ordered = [(int(plan.task_block[t]), int(plan.task_i[t]), int(plan.task_j[t]))
+               for t in order]
+    assert ordered == [(0, -1, -1), (3, 1, 0), (2, -1, -1),
+                       (3, 1, 1), (1, -1, -1), (3, 0, 0)]
+
+    # Fig. 5: replication of the 5 split-block entities → 14 + 5 = 19.
+    assert plan.map_output_size() == 19
+    # Greedy LPT loads: {7, 7, 6}.
+    assert plan.reducer_pairs.sum() == 20
+    assert sorted(plan.reducer_pairs.tolist()) == [6, 7, 7]
+
+
+def test_basic_plan():
+    _, blocks, parts = example()
+    bdm = compute_bdm(blocks, parts, 4, 2)
+    plan = plan_basic(bdm, r=3)
+    assert plan.total_pairs == 20
+    assert plan.map_output_size() == 14  # no replication
+    # Basic's makespan is lower-bounded by the largest block (10 pairs).
+    assert plan.reducer_pairs.max() >= 10
+
+
+def test_pair_range_plan_and_materialization():
+    _, blocks, parts = example()
+    bdm = compute_bdm(blocks, parts, 4, 2)
+    plan = plan_pair_range(bdm, r=3)
+    assert plan.total_pairs == 20
+    np.testing.assert_array_equal(plan.bounds, [[0, 7], [7, 14], [14, 20]])
+    seen = set()
+    for k in range(3):
+        blk, x, y, ra, rb = pairs_of_range(plan, k)
+        assert (x < y).all()
+        for t in zip(blk, x, y):
+            seen.add(tuple(int(v) for v in t))
+    assert len(seen) == 20  # every pair exactly once
+
+
+def test_entity_range_matrix_covers_m_and_f():
+    """§V/Fig. 7: M goes to reducers 1 and 2 only; the third reducer
+    receives all of Φ3 but F."""
+    names, blocks, parts = example()
+    bdm = compute_bdm(blocks, parts, 4, 2)
+    idx = entity_indices(blocks, parts, bdm)
+    plan = plan_pair_range(bdm, r=3)
+    mask = entity_range_matrix(plan)
+    perm, estart = blocked_layout(blocks, idx, plan.block_sizes)
+    # M: Π1[4] → source row 7+4 = 11; blocked row estart[3]+2 = 9+2 = 11.
+    m_row = int(estart[3] + 2)
+    assert perm[m_row] == 11
+    # M's pairs 11,14,17,18 → ranges (per=7): 1, 2, 2, 2.
+    np.testing.assert_array_equal(mask[m_row], [False, True, True])
+    # F (block 3, x=0): pairs 10..13 all in ℜ1 → not sent to ℜ2.
+    f_row = int(estart[3] + 0)
+    np.testing.assert_array_equal(mask[f_row], [False, True, False])
+    # Reducer 2 receives G, M, N, O of Φ3 (everything but F).
+    phi3_rows = np.arange(estart[3], estart[3] + 5)
+    np.testing.assert_array_equal(mask[phi3_rows, 2], [False, True, True, True, True])
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 17, 128, 1000])
+def test_invert_cell_index_bruteforce(n):
+    q = np.arange(n * (n - 1) // 2, dtype=np.int64)
+    x, y = en.invert_cell_index(q, np.int64(n))
+    ref = [(a, b) for a in range(n) for b in range(a + 1, n)]
+    ref.sort(key=lambda t: en.cell_index(t[0], t[1], n))
+    np.testing.assert_array_equal(x, [t[0] for t in ref])
+    np.testing.assert_array_equal(y, [t[1] for t in ref])

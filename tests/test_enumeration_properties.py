@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on the paper's enumeration math —
+the invariants everything else rests on:
+
+  * cell_index / invert_cell_index are mutually inverse bijections onto
+    [0, N(N-1)/2);
+  * global pair_index bijects onto [0, P) across arbitrary block-size
+    vectors (incl. 0- and 1-entity blocks);
+  * PairRange ranges partition the pair space with the ceil split of
+    Alg. 2 (first r-1 ranges ⌈P/r⌉ pairs);
+  * greedy LPT respects the classic (4/3 − 1/3r)·OPT makespan bound and
+    conserves total work;
+  * BlockSplit match tasks cover each split block's pair set exactly
+    once (disjoint ∪ exhaustive);
+  * the jnp closed-form inverse equals the numpy oracle for every p.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import enumeration as en
+from repro.core.assignment import greedy_lpt
+from repro.core import (compute_bdm, entity_indices, plan_block_split,
+                        plan_pair_range, pairs_of_range)
+from repro.core.pair_range import pairs_of_range_jnp
+
+sizes_strategy = st.lists(st.integers(0, 60), min_size=1, max_size=30)
+
+
+@given(st.integers(2, 512))
+@settings(max_examples=40, deadline=None)
+def test_cell_index_bijection(n):
+    q = np.arange(n * (n - 1) // 2, dtype=np.int64)
+    x, y = en.invert_cell_index(q, np.int64(n))
+    assert (0 <= x).all() and (x < y).all() and (y < n).all()
+    np.testing.assert_array_equal(en.cell_index(x, y, n), q)
+
+
+@given(sizes_strategy)
+@settings(max_examples=60, deadline=None)
+def test_pair_index_bijection_across_blocks(sizes):
+    sizes = np.asarray(sizes, np.int64)
+    counts = en.block_pair_counts(sizes)
+    offsets, total = en.pair_offsets(counts)
+    if total == 0:
+        return
+    p = np.arange(total, dtype=np.int64)
+    blk, x, y = en.invert_pair_index(p, sizes, offsets)
+    assert (x < y).all()
+    assert (y < sizes[blk]).all()
+    np.testing.assert_array_equal(en.pair_index(blk, x, y, sizes, offsets), p)
+
+
+@given(sizes_strategy, st.integers(1, 40))
+@settings(max_examples=60, deadline=None)
+def test_range_bounds_partition(sizes, r):
+    sizes = np.asarray(sizes, np.int64)
+    _, total = en.pair_offsets(en.block_pair_counts(sizes))
+    bounds = en.range_bounds(total, r)
+    assert bounds.shape == (r, 2)
+    assert bounds[0, 0] == 0
+    assert bounds[-1, 1] == total
+    # contiguity + ceil split (paper Alg. 2)
+    per = -(-total // r) if total else 0
+    for k in range(r - 1):
+        assert bounds[k, 1] == bounds[k + 1, 0]
+        assert bounds[k, 1] - bounds[k, 0] in (per, max(total - k * per, 0))
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200),
+       st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_greedy_lpt_bound_and_conservation(weights, r):
+    w = np.asarray(weights, np.int64)
+    assignment, loads = greedy_lpt(w, r)
+    assert loads.sum() == w.sum()
+    np.testing.assert_array_equal(
+        np.bincount(assignment, weights=w, minlength=r).astype(np.int64), loads)
+    opt_lb = max(float(w.sum()) / r, float(w.max()) if w.size else 0.0)
+    if opt_lb > 0:
+        assert loads.max() <= (4 / 3 - 1 / (3 * r)) * opt_lb + 1e-9 or \
+            loads.max() <= w.max()  # single dominant task
+
+
+@given(st.integers(1, 500), st.integers(1, 8), st.integers(1, 24),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_block_split_covers_all_pairs(n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    # Zipf-ish skewed block ids
+    blocks = (rng.zipf(1.5, size=n) - 1) % max(n // 4, 1)
+    parts = rng.integers(0, m, n)
+    bdm = compute_bdm(blocks, parts, int(blocks.max()) + 1, m)
+    plan = plan_block_split(bdm, r)
+    # enumerate every task's pairs in the blocked layout and check the
+    # union is exactly the within-block pair set
+    got = set()
+    for t in range(plan.task_block.shape[0]):
+        a0, al = int(plan.task_a_start[t]), int(plan.task_a_len[t])
+        b0, bl = int(plan.task_b_start[t]), int(plan.task_b_len[t])
+        if plan.task_triangular[t]:
+            for i in range(al):
+                for j in range(i + 1, al):
+                    pair = (a0 + i, a0 + j)
+                    assert pair not in got
+                    got.add(pair)
+        else:
+            for i in range(al):
+                for j in range(bl):
+                    pair = tuple(sorted((a0 + i, b0 + j)))
+                    assert pair not in got
+                    got.add(pair)
+    assert len(got) == plan.total_pairs
+    assert plan.reducer_pairs.sum() == plan.total_pairs
+
+
+@given(sizes_strategy, st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_pair_range_materialization_partitions(sizes, r):
+    sizes = np.asarray(sizes, np.int64)
+    m = 2
+    bdm = np.stack([sizes - sizes // 2, sizes // 2], axis=1)
+    plan = plan_pair_range(bdm, r)
+    seen = set()
+    for k in range(r):
+        blk, x, y, ra, rb = pairs_of_range(plan, k)
+        for t in zip(blk.tolist(), x.tolist(), y.tolist()):
+            assert t not in seen
+            seen.add(t)
+    assert len(seen) == plan.total_pairs
+
+
+@given(sizes_strategy, st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_jnp_inverse_matches_numpy(sizes, r):
+    import jax.numpy as jnp
+
+    sizes = np.asarray(sizes, np.int64)
+    bdm = sizes[:, None]
+    plan = plan_pair_range(bdm, r)
+    if plan.total_pairs == 0:
+        return
+    n_dev = r
+    cap = -(-plan.total_pairs // n_dev)
+    for dev in range(n_dev):
+        ra, rb, valid = pairs_of_range_jnp(
+            jnp.asarray(plan.block_sizes, jnp.int32),
+            jnp.asarray(plan.offsets, jnp.int32),
+            jnp.asarray(plan.estart, jnp.int32),
+            jnp.asarray(dev * cap, jnp.int32), cap, plan.total_pairs)
+        lo = dev * cap
+        hi = min(lo + cap, plan.total_pairs)
+        if hi <= lo:
+            assert not bool(np.asarray(valid).any())
+            continue
+        blk, x, y = en.invert_pair_index(
+            np.arange(lo, hi), plan.block_sizes, plan.offsets)
+        np.testing.assert_array_equal(
+            np.asarray(ra)[: hi - lo], plan.estart[blk] + x)
+        np.testing.assert_array_equal(
+            np.asarray(rb)[: hi - lo], plan.estart[blk] + y)
+        assert bool(np.asarray(valid)[: hi - lo].all())
