@@ -8,6 +8,13 @@ from .blocking import (  # noqa: F401
 )
 from .datasets import Dataset, make_products, make_publications  # noqa: F401
 from .encode import encode_titles, ngram_features  # noqa: F401
+from .executor import (  # noqa: F401
+    TileCatalog,
+    build_catalog,
+    match_catalog,
+    score_catalog,
+    verify_pairs,
+)
 from .pipeline import ERConfig, ERResult, run_er  # noqa: F401
 from .similarity import (  # noqa: F401
     cosine_scores,

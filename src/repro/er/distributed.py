@@ -13,19 +13,26 @@ blocking keys — its BDM *column* — then one ``all_gather`` produces the
 full b × m matrix, replicated. This is Alg. 3 with the footnote-2 combiner
 (the local bincount) built in.
 
-Job 2, two executors:
+Job 2, three executors:
+  * :func:`match_catalog_dist` — THE generic fused path (any strategy):
+    the host compiles the plan to a tile catalog (er/executor.py), tiles
+    are routed reducer → device round-robin, and every device scores its
+    padded tile shard with the catalog kernel over the all-gathered
+    features. O(#tiles) metadata crosses the host/device boundary, never
+    O(P) pair indices; stage-2 verify runs host-side on the compacted
+    survivors.
   * :func:`match_pair_range_dist` — PairRange fully in-jit: every device
     derives its own pair list from the tiny replicated plan arrays
     (sizes/offsets/estart) via the closed-form inverse — the paper's
     map-side "relevant ranges" computation. No host-side pair
     materialization; essential at DS2 scale (6.7·10⁹ pairs).
-  * :func:`match_shards_hostplan` — generic executor for Basic/BlockSplit:
-    the host plan (the map phase) emits per-device padded row-index
-    arrays; devices gather the rows and match.
+  * :func:`match_shards_hostplan` — legacy executor for Basic/BlockSplit
+    (per-device padded row-index arrays, O(P) host memory). Kept for
+    comparison benchmarks; new callers should use the catalog path.
 
-Both all_gather the (row-sharded) feature/code tensors — the collective-
-volume analog of the paper's map-output replication (Fig. 12); the
-benchmarks account it in bytes.
+All three all_gather the (row-sharded) feature/code tensors — the
+collective-volume analog of the paper's map-output replication (Fig. 12);
+the benchmarks account it in bytes.
 """
 from __future__ import annotations
 
@@ -38,15 +45,35 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.pair_range import PairRangePlan, pairs_of_range_jnp
+from .executor import A_TILE, B_TILE, NCOLS, RED, TileCatalog
 from .similarity import two_stage_match
 
 __all__ = [
     "compute_bdm_sharded",
+    "match_catalog_dist",
     "match_pair_range_dist",
     "match_shards_hostplan",
     "device_assignment",
     "plan_rows_for_devices",
+    "plan_tiles_for_devices",
 ]
+
+
+# shard_map moved from jax.experimental to the top-level namespace (with
+# check_rep renamed check_vma) across the jax versions we support; the
+# call sites below go through this shim.
+try:
+    _shard_map_new = jax.shard_map
+
+    def _smap(f, mesh, in_specs, out_specs):
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def _smap(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -63,10 +90,7 @@ def compute_bdm_sharded(block_ids, num_blocks: int, mesh: Mesh,
         cols = jax.lax.all_gather(col, axis)          # (m, b)
         return cols.T.astype(jnp.int32)               # (b, m)
 
-    shard = jax.shard_map(
-        job1, mesh=mesh,
-        in_specs=P(axis), out_specs=P(),
-        check_vma=False)  # all_gather output is replicated by construction
+    shard = _smap(job1, mesh, in_specs=P(axis), out_specs=P())
     return shard(block_ids)
 
 
@@ -115,6 +139,25 @@ def plan_rows_for_devices(reducer_rows, r: int, n_dev: int,
     return rows_a, rows_b, valid
 
 
+def plan_tiles_for_devices(catalog: TileCatalog, n_dev: int,
+                           healthy: Optional[np.ndarray] = None) -> np.ndarray:
+    """Partition a tile catalog over devices: reducer → device round-robin
+    (:func:`device_assignment`), per-device tile lists padded to a common
+    cap with all-zero entries (empty validity window → no survivors).
+    Returns (n_dev, cap, NCOLS) int32 — O(#tiles) metadata, the only
+    plan state that crosses the host/device boundary."""
+    dev_of = device_assignment(catalog.r, n_dev, healthy)
+    dev = dev_of[catalog.tiles[:, RED]] if catalog.num_tiles else \
+        np.zeros(0, np.int64)
+    counts = np.bincount(dev, minlength=n_dev)
+    cap = max(1, int(counts.max()) if counts.size else 1)
+    out = np.zeros((n_dev, cap, NCOLS), np.int32)
+    for d in range(n_dev):
+        mine = catalog.tiles[dev == d]
+        out[d, :mine.shape[0]] = mine
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Job 2 executors
 # ---------------------------------------------------------------------------
@@ -125,6 +168,62 @@ def _match_local(feats, codes, lens, ra, rb, valid, threshold, margin):
         threshold=threshold, filter_margin=margin)
     mask = mask & valid
     return mask, jnp.where(mask, score, 0.0)
+
+
+def match_catalog_dist(feats, catalog: TileCatalog, mesh: Mesh,
+                       axis: str = "data", threshold: float = 0.8,
+                       impl: str = "xla",
+                       healthy: Optional[np.ndarray] = None,
+                       chunk_tiles: int = 1024
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 1 of any plan on a mesh via the tile-catalog executor.
+
+    feats (n, d) f32 in the blocked layout, row-sharded over ``axis``.
+    Each device all_gathers the features and scores its tile shard
+    (reducer → device round-robin, elasticity via ``healthy``) with the
+    catalog kernel — the per-device work is exactly the plan's reducer
+    loads, so the makespan IS the paper's balance metric. Tile shards are
+    processed ``chunk_tiles`` per device at a time and each chunk's
+    survivor masks are compacted immediately, so host memory stays
+    O(n_dev · chunk_tiles · bm · bn) regardless of plan size. Returns the
+    compacted stage-1 survivor candidates (rows_a, rows_b) as host int64
+    arrays; run stage 2 with ``executor.verify_pairs``.
+
+    ``impl="xla"`` (default) is shard_map-safe everywhere; pass "pallas"
+    on a TPU backend to run the fused kernel per device.
+    """
+    from ..kernels import ops
+
+    n_dev = int(np.prod([mesh.shape[a] for a in (axis,)]))
+    tiles_dev = plan_tiles_for_devices(catalog, n_dev, healthy)
+    bm, bn = catalog.block_m, catalog.block_n
+    cap = tiles_dev.shape[1]
+    chunk = min(chunk_tiles, cap)
+    if cap % chunk:  # pad so every chunk traces with one shape
+        pad = chunk - cap % chunk
+        tiles_dev = np.concatenate(
+            [tiles_dev, np.zeros((n_dev, pad, NCOLS), np.int32)], axis=1)
+        cap += pad
+
+    def job2(feats_l, tiles_l):
+        feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
+        mask = ops.pair_scores_catalog(
+            feats_g, feats_g, tiles_l[0], threshold=threshold,
+            block_m=bm, block_n=bn, impl=impl)
+        return mask[None]
+
+    shard = jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(axis)),
+                          out_specs=P(axis)))
+    out_a, out_b = [], []
+    for lo in range(0, cap, chunk):
+        part = tiles_dev[:, lo:lo + chunk]
+        masks = np.asarray(shard(feats, jnp.asarray(part)))
+        d, ti, ii, jj = np.nonzero(masks)
+        out_a.append(part[d, ti, A_TILE].astype(np.int64) * bm + ii)
+        out_b.append(part[d, ti, B_TILE].astype(np.int64) * bn + jj)
+    if not out_a:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(out_a), np.concatenate(out_b)
 
 
 def match_pair_range_dist(feats, codes, lens, plan: PairRangePlan,
@@ -160,20 +259,19 @@ def match_pair_range_dist(feats, codes, lens, plan: PairRangePlan,
         out = lambda x: x[None]  # (1, cap) per device → (n_dev, cap) stacked
         return out(ra), out(rb), out(mask), out(score)
 
-    shard = jax.shard_map(
-        job2, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=(P(axis), P(axis), P(axis), P(axis)),
-        check_vma=False)  # replicated plan constants mix with varying data
+    shard = _smap(job2, mesh,
+                  in_specs=(P(axis), P(axis), P(axis)),
+                  out_specs=(P(axis), P(axis), P(axis), P(axis)))
     return shard(feats, codes, lens)
 
 
 def match_shards_hostplan(feats, codes, lens, rows_a, rows_b, valid,
                           mesh: Mesh, axis: str = "data",
                           threshold: float = 0.8, filter_margin: float = 0.25):
-    """Generic executor: per-device padded row pairs (from
-    :func:`plan_rows_for_devices`), row-sharded features. Used by Basic and
-    BlockSplit (whose pair lists come from host tile geometry)."""
+    """LEGACY executor: per-device padded row pairs (from
+    :func:`plan_rows_for_devices`), row-sharded features — O(P) host
+    memory. Kept as a comparison baseline; use :func:`match_catalog_dist`
+    for the O(#tiles) fused path."""
 
     def job2(feats_l, codes_l, lens_l, ra, rb, v):
         feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
@@ -184,9 +282,7 @@ def match_shards_hostplan(feats, codes, lens, rows_a, rows_b, valid,
             threshold, filter_margin)
         return mask[None], score[None]
 
-    shard = jax.shard_map(
-        job2, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(axis), P(axis)),
-        check_vma=False)  # replicated plan constants mix with varying data
+    shard = _smap(job2, mesh,
+                  in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
+                  out_specs=(P(axis), P(axis)))
     return shard(feats, codes, lens, rows_a, rows_b, valid)

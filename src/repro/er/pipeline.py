@@ -4,12 +4,15 @@ Job 1: blocking keys + block distribution matrix (BDM).
 Job 2: strategy plan (Basic / BlockSplit / PairRange) + reduce-phase
 matching (two-stage cosine-filter → edit-distance verify).
 
-Reduce tasks execute as *vectorized pair batches*: a reduce task's pair
-list is materialized from the plan (closed form for PairRange, tile
-geometry for BlockSplit) and pushed through the jit-ed matcher in fixed-
-size chunks (one compilation, padded tail). Per-reducer wall time is
-measured so the benchmarks can report both the paper's balance metric
-(pairs per reducer) and observed makespans.
+The reduce phase executes through the *tile-catalog executor*
+(er/executor.py): the plan compiles to a flat catalog of MXU-aligned
+tiles and the whole match phase runs as fused kernel calls — stage-1
+cosine filter on the Pallas kernel (XLA batched-matmul twin on CPU),
+stage-2 exact edit-distance verify on the compacted survivors. No
+per-pair index arrays are materialized host-side; catalog memory is
+O(#tiles). ``ERConfig.executor = "reference"`` keeps the original
+per-reducer numpy loop (materialized pair lists + chunked ``np.einsum``)
+as the parity oracle and the before/after benchmark baseline.
 
 Entities without blocking keys (block id −1) follow the paper's
 decomposition: match_B(R,R) over the keyed subset ∪ match_⊥(R, R_∅) via a
@@ -34,10 +37,11 @@ from ..core import (
     plan_pair_range,
     pairs_of_range,
 )
+from ..core.pair_range import map_output_size as pair_range_map_output_size
 from ..core.two_source import TwoSourceBDM, plan_pair_range_2src, pairs_of_range_2src
 from .blocking import prefix_block_ids
 from .encode import encode_titles, ngram_features
-from .similarity import two_stage_match
+from .executor import build_catalog, catalog_for_cross, match_catalog
 
 __all__ = ["ERConfig", "ERResult", "run_er"]
 
@@ -55,6 +59,10 @@ class ERConfig:
     max_len: int = 64
     filter_margin: float = 0.25
     match_missing_keys: bool = True
+    executor: str = "catalog"          # catalog | reference
+    block_m: int = 128                 # catalog tile rows (MXU-aligned)
+    block_n: int = 128                 # catalog tile cols
+    kernel_impl: str = "auto"          # auto | pallas | interpret | xla
 
 
 @dataclass
@@ -77,11 +85,11 @@ _VERIFY_CHUNK = 8_192
 
 def _match_pairs_chunked(feats, codes, lens, rows_a, rows_b,
                          threshold, margin) -> Tuple[np.ndarray, np.ndarray]:
-    """Filter-and-verify over (rows_a, rows_b); returns the matched row
-    pairs. Stage 1 (cosine, a paired dot product) runs over everything and
-    prunes; stage 2 (exact edit distance) runs only on survivors — this is
-    the sparsity the Pallas executor exploits at tile level, realized here
-    at chunk level. Fixed chunk sizes → one jit compilation each."""
+    """REFERENCE executor (``ERConfig.executor = "reference"``): filter-
+    and-verify over materialized (rows_a, rows_b). Stage 1 is a host
+    ``np.einsum`` paired dot; stage 2 the exact verifier. Kept as the
+    parity oracle for the tile-catalog executor and as the before-side of
+    the kernel benchmark — the hot path no longer runs through here."""
     from .similarity import edit_similarity
 
     n = rows_a.shape[0]
@@ -116,7 +124,8 @@ def _match_pairs_chunked(feats, codes, lens, rows_a, rows_b,
 
 
 def _tile_pairs(a0: int, alen: int, b0: int, blen: int, tri: bool):
-    """Row-index pairs of one BlockSplit match task."""
+    """Row-index pairs of one match task — reference executor only (the
+    catalog path never materializes per-pair indices)."""
     if tri:
         x, y = np.triu_indices(alen, k=1)
         return a0 + x, a0 + y
@@ -162,60 +171,84 @@ def run_er(titles: Sequence[str], config: ERConfig = ERConfig(),
     g_codes = codes[to_global]
     g_lens = lens[to_global]
 
-    # ---- Job 2: plan + reduce-phase matching ----
-    reducer_rows: List[Tuple[np.ndarray, np.ndarray]] = [
-        (np.zeros(0, np.int64), np.zeros(0, np.int64)) for _ in range(cfg.r)]
-
+    # ---- Job 2: plan ----
     if cfg.strategy == "pair_range":
         plan = plan_pair_range(bdm, cfg.r)
-        for k in range(cfg.r):
-            _, _, _, ra, rb = pairs_of_range(plan, k)
-            reducer_rows[k] = (ra, rb)
-        reducer_pairs = plan.reducer_pairs
-        from .. import core
-        map_out = core.pair_range.map_output_size(plan) \
-            if plan.total_pairs <= 50_000_000 else -1
-        total = plan.total_pairs
+        # Closed-form O(r + b) math (core/pair_range.map_output_size) —
+        # exact at any scale, so it is ALWAYS computed (no -1 sentinel).
+        map_out = pair_range_map_output_size(plan)
     elif cfg.strategy == "block_split":
         plan = plan_block_split(bdm, cfg.r)
-        for t in range(plan.task_block.shape[0]):
-            ra, rb = _tile_pairs(
-                int(plan.task_a_start[t]), int(plan.task_a_len[t]),
-                int(plan.task_b_start[t]), int(plan.task_b_len[t]),
-                bool(plan.task_triangular[t]))
-            k = int(plan.task_reducer[t])
-            pa, pb = reducer_rows[k]
-            reducer_rows[k] = (np.concatenate([pa, ra]), np.concatenate([pb, rb]))
-        reducer_pairs = plan.reducer_pairs
         map_out = plan.map_output_size()
-        total = plan.total_pairs
     elif cfg.strategy == "basic":
         plan = plan_basic(bdm, cfg.r)
-        for k_blk in range(sizes.shape[0]):
-            if sizes[k_blk] < 2:
-                continue
-            ra, rb = _tile_pairs(int(estart[k_blk]), int(sizes[k_blk]), 0, 0, True)
-            k = int(plan.block_reducer[k_blk])
-            pa, pb = reducer_rows[k]
-            reducer_rows[k] = (np.concatenate([pa, ra]), np.concatenate([pb, rb]))
-        reducer_pairs = plan.reducer_pairs
         map_out = plan.map_output_size()
-        total = plan.total_pairs
     else:
         raise ValueError(f"unknown strategy {cfg.strategy!r}")
+    reducer_pairs = plan.reducer_pairs
+    total = plan.total_pairs
 
+    # ---- Job 2: reduce-phase matching ----
     matches: Set[Tuple[int, int]] = set()
     reducer_seconds = np.zeros(cfg.r)
-    for k in range(cfg.r):
-        ra, rb = reducer_rows[k]
-        if ra.size == 0:
-            continue
+    if cfg.executor == "catalog":
+        # Fused path: compile the plan to MXU tiles, score them all on the
+        # kernel, verify compacted survivors. One launch per mask chunk —
+        # wall time is attributed to reducers by planned load (the paper's
+        # balance metric), since no per-reducer loop exists anymore.
+        catalog = build_catalog(plan, cfg.block_m, cfg.block_n)
         t0 = time.perf_counter()
-        ha, hb = _match_pairs_chunked(
-            g_feats, g_codes, g_lens, ra, rb, cfg.threshold, cfg.filter_margin)
-        reducer_seconds[k] = time.perf_counter() - t0
+        ha, hb = match_catalog(
+            catalog, g_feats, g_codes, g_lens,
+            threshold=cfg.threshold, filter_margin=cfg.filter_margin,
+            impl=cfg.kernel_impl)
+        elapsed = time.perf_counter() - t0
         for a, b in zip(to_global[ha], to_global[hb]):
             matches.add((min(int(a), int(b)), max(int(a), int(b))))
+        if total:
+            reducer_seconds = (elapsed * np.asarray(reducer_pairs, np.float64)
+                               / total)
+    elif cfg.executor == "reference":
+        reducer_rows: List[Tuple[np.ndarray, np.ndarray]] = [
+            (np.zeros(0, np.int64), np.zeros(0, np.int64))
+            for _ in range(cfg.r)]
+        if cfg.strategy == "pair_range":
+            for k in range(cfg.r):
+                _, _, _, ra, rb = pairs_of_range(plan, k)
+                reducer_rows[k] = (ra, rb)
+        elif cfg.strategy == "block_split":
+            for t in range(plan.task_block.shape[0]):
+                ra, rb = _tile_pairs(
+                    int(plan.task_a_start[t]), int(plan.task_a_len[t]),
+                    int(plan.task_b_start[t]), int(plan.task_b_len[t]),
+                    bool(plan.task_triangular[t]))
+                k = int(plan.task_reducer[t])
+                pa, pb = reducer_rows[k]
+                reducer_rows[k] = (np.concatenate([pa, ra]),
+                                   np.concatenate([pb, rb]))
+        else:
+            for k_blk in range(sizes.shape[0]):
+                if sizes[k_blk] < 2:
+                    continue
+                ra, rb = _tile_pairs(
+                    int(estart[k_blk]), int(sizes[k_blk]), 0, 0, True)
+                k = int(plan.block_reducer[k_blk])
+                pa, pb = reducer_rows[k]
+                reducer_rows[k] = (np.concatenate([pa, ra]),
+                                   np.concatenate([pb, rb]))
+        for k in range(cfg.r):
+            ra, rb = reducer_rows[k]
+            if ra.size == 0:
+                continue
+            t0 = time.perf_counter()
+            ha, hb = _match_pairs_chunked(
+                g_feats, g_codes, g_lens, ra, rb,
+                cfg.threshold, cfg.filter_margin)
+            reducer_seconds[k] = time.perf_counter() - t0
+            for a, b in zip(to_global[ha], to_global[hb]):
+                matches.add((min(int(a), int(b)), max(int(a), int(b))))
+    else:
+        raise ValueError(f"unknown executor {cfg.executor!r}")
 
     extra: Dict = {}
     # ---- match_⊥(R, R_∅): entities without blocking key vs everyone ----
@@ -226,17 +259,32 @@ def run_er(titles: Sequence[str], config: ERConfig = ERConfig(),
             bdm_s=np.full((1, 1), null_idx.size, np.int64))
         plan2 = plan_pair_range_2src(bdm2, cfg.r)
         extra["null_key_pairs"] = plan2.total_pairs
-        for k in range(cfg.r):
-            _, _, _, rr, rs = pairs_of_range_2src(plan2, k)
-            if rr.size == 0:
-                continue
-            ha, hb = _match_pairs_chunked(
-                feats, codes, lens,
-                rr, null_idx[rs], cfg.threshold, cfg.filter_margin)
-            for a, b in zip(ha, hb):
+        if cfg.executor == "catalog":
+            cross = catalog_for_cross(n, null_idx.size, r=cfg.r,
+                                      block_m=cfg.block_m,
+                                      block_n=cfg.block_n)
+            ha, hb = match_catalog(
+                cross, feats, codes, lens,
+                feats_b=feats[null_idx], codes_b=codes[null_idx],
+                lens_b=lens[null_idx],
+                threshold=cfg.threshold, filter_margin=cfg.filter_margin,
+                impl=cfg.kernel_impl)
+            for a, b in zip(ha, null_idx[hb]):
                 a, b = int(a), int(b)
                 if a != b:
                     matches.add((min(a, b), max(a, b)))
+        else:
+            for k in range(cfg.r):
+                _, _, _, rr, rs = pairs_of_range_2src(plan2, k)
+                if rr.size == 0:
+                    continue
+                ha, hb = _match_pairs_chunked(
+                    feats, codes, lens,
+                    rr, null_idx[rs], cfg.threshold, cfg.filter_margin)
+                for a, b in zip(ha, hb):
+                    a, b = int(a), int(b)
+                    if a != b:
+                        matches.add((min(a, b), max(a, b)))
         total += plan2.total_pairs
 
     return ERResult(

@@ -17,8 +17,10 @@ from . import ref
 from .flash_attention import flash_attention as _flash
 from .grouped_mm import grouped_matmul as _gmm, pad_groups  # noqa: F401
 from .pair_sim import pair_scores as _pair_scores
+from .pair_sim import pair_scores_catalog as _pair_scores_catalog
 
-__all__ = ["pair_scores", "grouped_matmul", "attention", "pad_groups"]
+__all__ = ["pair_scores", "pair_scores_catalog", "grouped_matmul",
+           "attention", "pad_groups"]
 
 
 def _resolve(impl: str) -> str:
@@ -35,6 +37,22 @@ def pair_scores(a, b, *, threshold: float = 0.8, triangular: bool = False,
     return _pair_scores(a, b, threshold=threshold, triangular=triangular,
                         block_m=block_m, block_n=block_n,
                         interpret=(impl == "interpret"))
+
+
+def pair_scores_catalog(a, b, catalog, *, threshold: float = 0.8,
+                        block_m: int = 128, block_n: int = 128,
+                        impl: str = "pallas"):
+    """Tile-catalog survivor masks (see pair_sim.pair_scores_catalog).
+    ``impl="xla"`` is the production CPU path (batched dynamic-slice
+    matmul), not just a test oracle — interpret mode is Python-slow."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.pair_scores_catalog_ref(
+            a, b, catalog, threshold=threshold,
+            block_m=block_m, block_n=block_n)
+    return _pair_scores_catalog(a, b, catalog, threshold=threshold,
+                                block_m=block_m, block_n=block_n,
+                                interpret=(impl == "interpret"))
 
 
 def grouped_matmul(x, tile_expert, w, *, block_t: int = 128,

@@ -14,6 +14,20 @@ unsplit blocks) via global row/col indices derived from program_id.
 VMEM per step (f32, d=256, 128×128 tiles): 128·256·4 × 2 + 128·128·4
 ≈ 320 KiB — far under the ~16 MiB/core budget; block sizes are exposed
 for the §Perf sweep.
+
+Two entry points:
+  * :func:`pair_scores` — dense (M, N) scoring of two full matrices
+    (kept as the simple test target and the building block the dense
+    benchmarks use).
+  * :func:`pair_scores_catalog` — the *tile-catalog* variant driving the
+    fused plan executor (er/executor.py, DESIGN.md §Catalog): the grid is
+    one-dimensional over catalog entries; a scalar-prefetch operand (the
+    catalog, SMEM) feeds the BlockSpec index_maps so each grid step pulls
+    the two feature strips named by the current entry — the same pattern
+    grouped_mm.py uses for expert tiles. The kernel applies the entry's
+    validity window, triangular mask and PairRange corner cuts in-kernel
+    and writes a per-tile survivor mask; the host compacts survivors and
+    runs the exact verifier only on them.
 """
 from __future__ import annotations
 
@@ -23,7 +37,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pair_scores"]
+__all__ = ["pair_scores", "pair_scores_catalog", "catalog_tile_mask", "NCOLS"]
+
+# Catalog entry layout (int32 columns) — shared with er/executor.py and
+# kernels/ref.py. Rows/cols below are *global* row indices of the feature
+# matrices; a tile covers rows [a_tile·bm, (a_tile+1)·bm) × cols
+# [b_tile·bn, (b_tile+1)·bn).
+#   0 a_tile   LHS strip index (units of block_m)
+#   1 b_tile   RHS strip index (units of block_n)
+#   2 r0, 3 r1 valid row window [r0, r1)   (task bounds)
+#   4 c0, 5 c1 valid col window [c0, c1)
+#   6 tri      1 → keep only row < col (intra-block tasks)
+#   7 lb_r, 8 lb_c   lower corner cut: keep (row > lb_r) | (col >= lb_c)
+#   9 ub_r, 10 ub_c  upper corner cut: keep (row < ub_r) | (col <= ub_c)
+#  11 reducer  owning reduce task (host-side attribution / device routing)
+NCOLS = 12
+
+
+def catalog_tile_mask(entry, gi, gj):
+    """The membership predicate of one catalog entry, shared by the Pallas
+    kernel and the XLA reference. ``entry`` holds the 12 int32 scalars,
+    ``gi``/``gj`` the (bm, bn) global row/col index grids."""
+    keep = (gi >= entry[2]) & (gi < entry[3])
+    keep &= (gj >= entry[4]) & (gj < entry[5])
+    keep &= (entry[6] == 0) | (gi < gj)
+    keep &= (gi > entry[7]) | (gj >= entry[8])
+    keep &= (gi < entry[9]) | (gj <= entry[10])
+    return keep
 
 
 def _kernel(a_ref, b_ref, o_ref, *, threshold: float, triangular: bool,
@@ -76,3 +116,62 @@ def pair_scores(a, b, *, threshold: float = 0.8, triangular: bool = False,
         interpret=interpret,
     )(a_p, b_p)
     return out[:m, :n]
+
+
+def _catalog_kernel(cat_ref, a_ref, b_ref, o_ref, *, threshold: float,
+                    block_m: int, block_n: int):
+    t = pl.program_id(0)
+    a = a_ref[...]                       # (block_m, d) — strip cat[t, 0]
+    b = b_ref[...]                       # (block_n, d) — strip cat[t, 1]
+    s = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (block_m, block_n) MXU
+    entry = [cat_ref[t, c] for c in range(NCOLS)]
+    gi = entry[0] * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    gj = entry[1] * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    keep = (s >= threshold) & catalog_tile_mask(entry, gi, gj)
+    o_ref[...] = keep[None].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "block_m", "block_n", "interpret"))
+def pair_scores_catalog(a, b, catalog, *, threshold: float = 0.8,
+                        block_m: int = 128, block_n: int = 128,
+                        interpret: bool = False):
+    """Survivor masks for a flat catalog of (block_m, block_n) tiles.
+
+    a: (M, d), b: (N, d) feature matrices (same array for single-source
+    plans); catalog: (T, NCOLS) int32 — see the column layout above.
+    Returns (T, block_m, block_n) f32 ∈ {0, 1}: 1 where the pair belongs
+    to the entry's task AND its score passes ``threshold``.
+
+    The catalog is the scalar-prefetch operand: the BlockSpec index_maps
+    read each entry's strip origins from SMEM before the step's DMA, so
+    the whole plan executes as ONE pallas_call regardless of how many
+    match tasks / blocks it covers.
+    """
+    from .grouped_mm import pltpu_prefetch
+
+    m, d = a.shape
+    n = b.shape[0]
+    t = catalog.shape[0]
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    a_p = jnp.zeros((mp, d), a.dtype).at[:m].set(a)
+    b_p = jnp.zeros((np_, d), b.dtype).at[:n].set(b)
+
+    grid_spec = pl.GridSpec(
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, cat: (cat[i, 0], 0)),
+            pl.BlockSpec((block_n, d), lambda i, cat: (cat[i, 1], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n), lambda i, cat: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_catalog_kernel, threshold=threshold,
+                          block_m=block_m, block_n=block_n),
+        grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1),
+        out_shape=jax.ShapeDtypeStruct((t, block_m, block_n), jnp.float32),
+        interpret=interpret,
+    )(catalog, a_p, b_p)

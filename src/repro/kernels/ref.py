@@ -1,11 +1,16 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose targets of the
-per-kernel sweep tests)."""
+per-kernel sweep tests). ``pair_scores_catalog_ref`` doubles as the
+production CPU/fallback path of the tile-catalog executor — a batched
+matmul over dynamic-sliced strips, shape-stable, shard_map-safe."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pair_scores_ref", "grouped_matmul_ref", "attention_ref"]
+__all__ = ["pair_scores_ref", "pair_scores_catalog_ref",
+           "grouped_matmul_ref", "attention_ref"]
 
 
 def pair_scores_ref(a, b, *, threshold: float = 0.8, triangular: bool = False):
@@ -18,6 +23,37 @@ def pair_scores_ref(a, b, *, threshold: float = 0.8, triangular: bool = False):
         cols = jnp.arange(n)[None, :]
         keep = keep & (rows < cols)
     return jnp.where(keep, s, 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "block_m", "block_n"))
+def pair_scores_catalog_ref(a, b, catalog, *, threshold: float = 0.8,
+                            block_m: int = 128, block_n: int = 128):
+    """jnp twin of kernels.pair_sim.pair_scores_catalog: vmap over catalog
+    entries, each gathering its two strips with ``dynamic_slice`` (the
+    BlockSpec-index_map analog) — XLA lowers the batch to one grouped
+    matmul. Same (T, bm, bn) f32 0/1 output."""
+    from .pair_sim import catalog_tile_mask
+
+    m, d = a.shape
+    n = b.shape[0]
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    a_p = jnp.zeros((mp, d), a.dtype).at[:m].set(a)
+    b_p = jnp.zeros((np_, d), b.dtype).at[:n].set(b)
+
+    def one(entry):
+        ai = jax.lax.dynamic_slice(a_p, (entry[0] * block_m, 0), (block_m, d))
+        bi = jax.lax.dynamic_slice(b_p, (entry[1] * block_n, 0), (block_n, d))
+        s = jax.lax.dot_general(
+            ai, bi, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        gi = entry[0] * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        gj = entry[1] * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        keep = (s >= threshold) & catalog_tile_mask(entry, gi, gj)
+        return keep.astype(jnp.float32)
+
+    return jax.vmap(one)(catalog)
 
 
 def grouped_matmul_ref(x, tile_expert, w, *, block_t: int = 128):

@@ -16,13 +16,18 @@ SCRIPT = textwrap.dedent("""
     from repro.er.blocking import prefix_block_ids
     from repro.er.datasets import make_products
     from repro.er.encode import encode_titles, ngram_features
-    from repro.er.distributed import (compute_bdm_sharded, match_pair_range_dist,
+    from repro.er.distributed import (compute_bdm_sharded, match_catalog_dist,
+                                      match_pair_range_dist,
                                       match_shards_hostplan, plan_rows_for_devices,
                                       device_assignment)
+    from repro.er.executor import build_catalog, verify_pairs
     from repro.er.pipeline import run_er, ERConfig
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    try:  # axis_types appeared in newer jax; default is fine where absent
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except AttributeError:
+        mesh = jax.make_mesh((8,), ("data",))
     n_dev = 8
 
     ds = make_products(1024, seed=5)
@@ -85,6 +90,23 @@ SCRIPT = textwrap.dedent("""
                 got2.add((min(ga, gb), max(ga, gb)))
     assert got2 == res.matches
     print("hostplan dist OK")
+
+    # ---- tile-catalog executor on the mesh (Basic + BlockSplit + PairRange,
+    # stage 1 per-device tile shards, stage 2 host verify) ----
+    from repro.core import plan_block_split
+    for mk_plan in (lambda: bplan, lambda: plan_block_split(bdm_host, n_dev),
+                    lambda: plan):
+        cplan = mk_plan()
+        cat = build_catalog(cplan, block_m=128, block_n=128)
+        ca, cb = match_catalog_dist(fb, cat, mesh, threshold=0.8 - 0.25)
+        ha, hb = verify_pairs(codes[perm], lens[perm], codes[perm], lens[perm],
+                              ca, cb, 0.8)
+        got3 = set()
+        for a, b in zip(ha, hb):
+            ga, gb = int(perm[a]), int(perm[b])
+            got3.add((min(ga, gb), max(ga, gb)))
+        assert got3 == res.matches, (type(cplan).__name__, len(got3), len(res.matches))
+    print("catalog dist OK")
 
     # ---- elasticity: reducers respread over healthy devices ----
     healthy = np.ones(n_dev, bool); healthy[[2, 5]] = False

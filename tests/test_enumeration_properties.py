@@ -15,6 +15,8 @@ the invariants everything else rests on:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep — skip, don't kill collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import enumeration as en
