@@ -1,0 +1,35 @@
+"""Sorted Neighborhood quickstart (arXiv:1010.3053 meets the load-balanced
+executor): dedup a product catalog by sliding a window over the title
+sort order instead of blocking on a key prefix.
+
+    PYTHONPATH=src python examples/dedup_sorted_neighborhood.py
+
+SN trades the block distribution's skew problem for a fixed O(n·w) band:
+the planner range-partitions the band's pair-index space into r balanced
+reduce tasks (imbalance ≈ 1 by construction), and the band compiles to
+diagonal-hugging MXU tiles scored by the same fused catalog kernel the
+blocking strategies use.
+"""
+import numpy as np
+
+from repro.er import ERConfig, make_products, run_er
+
+ds = make_products(8_000, seed=0)
+
+last = None
+for window in (5, 10, 50):
+    cfg = ERConfig(strategy="sorted_neighborhood", window=window, r=32)
+    last = res = run_er(ds.titles, cfg)
+    recall = len(res.matches & ds.true_pairs) / len(ds.true_pairs)
+    loads = res.reducer_pairs
+    print(f"w={window:3d}  band pairs={res.total_pairs:>9,}  "
+          f"map kv={res.map_output_size:>7,}  "
+          f"imbalance={loads.max() / loads.mean():.3f}  "
+          f"matches={len(res.matches):>5}  recall={recall:.3f}")
+
+# compare against the blocking baseline: same matcher, different search space
+base = run_er(ds.titles, ERConfig(strategy="pair_range", r=32))
+recall = len(base.matches & ds.true_pairs) / len(ds.true_pairs)
+print(f"\npair_range baseline: {base.total_pairs:,} pairs, recall={recall:.3f}"
+      f" — SN at w=50 searches {last.total_pairs / max(base.total_pairs, 1):.1f}×"
+      f" that, but needs no blocking key and cannot be skewed by one")

@@ -13,6 +13,12 @@ from .bdm import (  # noqa: F401
     entity_indices_jnp,
 )
 from .block_split import BlockSplitPlan, plan_block_split  # noqa: F401
+from .sorted_neighborhood import (  # noqa: F401
+    SortedNeighborhoodPlan,
+    band_pair_count,
+    pairs_of_band_range,
+    plan_sorted_neighborhood,
+)
 from .pair_range import (  # noqa: F401
     PairRangePlan,
     entity_range_matrix,

@@ -5,6 +5,8 @@ from .blocking import (  # noqa: F401
     dense_block_ids,
     exponential_block_ids,
     prefix_block_ids,
+    sn_sort_keys,
+    sn_sort_order,
 )
 from .datasets import Dataset, make_products, make_publications  # noqa: F401
 from .encode import encode_titles, ngram_features  # noqa: F401

@@ -13,7 +13,7 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 __all__ = ["prefix_block_ids", "dense_block_ids", "exponential_block_ids",
-           "exponential_block_sizes"]
+           "exponential_block_sizes", "sn_sort_keys", "sn_sort_order"]
 
 
 def prefix_block_ids(titles: Sequence[str], k: int = 3) -> Tuple[np.ndarray, List[str]]:
@@ -36,6 +36,22 @@ def prefix_block_ids(titles: Sequence[str], k: int = 3) -> Tuple[np.ndarray, Lis
             names.append(key)
         ids[i] = keys[key]
     return ids, names
+
+
+def sn_sort_keys(titles: Sequence[str]) -> List[str]:
+    """Sorted-Neighborhood sort keys (arXiv:1010.3053): the normalized
+    title itself — the lexicographic analog of the prefix blocking key,
+    but *total*: every entity gets a key (empty titles sort first), so SN
+    has no match_⊥ decomposition."""
+    return [t.strip().lower() for t in titles]
+
+
+def sn_sort_order(titles: Sequence[str]) -> np.ndarray:
+    """Stable argsort of :func:`sn_sort_keys` — the SN sort pass (the
+    MR-implementation's Job 1). Returns int64 positions: ``order[p]`` is
+    the original index of the entity at sorted position ``p``."""
+    return np.argsort(np.asarray(sn_sort_keys(titles)),
+                      kind="stable").astype(np.int64)
 
 
 def dense_block_ids(keys: Sequence) -> Tuple[np.ndarray, list]:

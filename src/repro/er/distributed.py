@@ -29,8 +29,13 @@ Job 2, three executors:
   * :func:`match_shards_hostplan` — legacy executor for Basic/BlockSplit
     (per-device padded row-index arrays, O(P) host memory). Kept for
     comparison benchmarks; new callers should use the catalog path.
+  * :func:`match_sn_dist` — Sorted Neighborhood, RepSN-style: each device
+    owns the band pairs starting in its shard and replicates only the
+    w−1 boundary rows of the next shard (neighbor ``ppermute``) instead
+    of all-gathering — O(n_dev·w·d) interconnect bytes vs O(n_dev·n·d)
+    (:func:`sn_replication_volume`).
 
-All three all_gather the (row-sharded) feature/code tensors — the
+The first three all_gather the (row-sharded) feature/code tensors — the
 collective-volume analog of the paper's map-output replication (Fig. 12);
 the benchmarks account it in bytes.
 """
@@ -45,17 +50,20 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.pair_range import PairRangePlan, pairs_of_range_jnp
-from .executor import A_TILE, B_TILE, NCOLS, RED, TileCatalog
+from ..core.sorted_neighborhood import _w_eff
+from .executor import A_TILE, B_TILE, NCOLS, RED, TileCatalog, _task_tiles
 from .similarity import two_stage_match
 
 __all__ = [
     "compute_bdm_sharded",
     "match_catalog_dist",
     "match_pair_range_dist",
+    "match_sn_dist",
     "match_shards_hostplan",
     "device_assignment",
     "plan_rows_for_devices",
     "plan_tiles_for_devices",
+    "sn_replication_volume",
 ]
 
 
@@ -162,6 +170,43 @@ def plan_tiles_for_devices(catalog: TileCatalog, n_dev: int,
 # Job 2 executors
 # ---------------------------------------------------------------------------
 
+def _pad_tile_chunks(tiles_dev: np.ndarray,
+                     chunk_tiles: int) -> Tuple[np.ndarray, int]:
+    """Pad the per-device tile cap to a chunk multiple (zero entries have
+    an empty validity window → no survivors) so every chunk traces with
+    one shape. Returns (padded tiles, chunk size)."""
+    n_dev, cap = tiles_dev.shape[:2]
+    chunk = min(chunk_tiles, max(cap, 1))
+    pad = (-cap) % chunk
+    if pad:
+        tiles_dev = np.concatenate(
+            [tiles_dev, np.zeros((n_dev, pad, NCOLS), np.int32)], axis=1)
+    return tiles_dev, chunk
+
+
+def _score_and_compact(shard, feats, tiles_dev, chunk: int, bm: int, bn: int,
+                       base: Optional[np.ndarray] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Drive a jitted per-shard catalog scorer chunk by chunk and compact
+    each chunk's (n_dev, chunk, bm, bn) survivor masks into global
+    (rows_a, rows_b) — host memory stays O(n_dev · chunk · bm · bn)
+    regardless of plan size. ``base`` (n_dev,) shifts device-local tile
+    coordinates to global rows (the RepSN local-coordinate path); None
+    means the tiles already carry global strip indices."""
+    cap = tiles_dev.shape[1]
+    out_a, out_b = [], []
+    for lo in range(0, cap, chunk):
+        part = tiles_dev[:, lo:lo + chunk]
+        masks = np.asarray(shard(feats, jnp.asarray(part)))
+        d, ti, ii, jj = np.nonzero(masks)
+        off = base[d] if base is not None else 0
+        out_a.append(off + part[d, ti, A_TILE].astype(np.int64) * bm + ii)
+        out_b.append(off + part[d, ti, B_TILE].astype(np.int64) * bn + jj)
+    if not out_a:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(out_a), np.concatenate(out_b)
+
+
 def _match_local(feats, codes, lens, ra, rb, valid, threshold, margin):
     mask, score = two_stage_match(
         feats[ra], feats[rb], codes[ra], lens[ra], codes[rb], lens[rb],
@@ -195,15 +240,9 @@ def match_catalog_dist(feats, catalog: TileCatalog, mesh: Mesh,
     from ..kernels import ops
 
     n_dev = int(np.prod([mesh.shape[a] for a in (axis,)]))
-    tiles_dev = plan_tiles_for_devices(catalog, n_dev, healthy)
     bm, bn = catalog.block_m, catalog.block_n
-    cap = tiles_dev.shape[1]
-    chunk = min(chunk_tiles, cap)
-    if cap % chunk:  # pad so every chunk traces with one shape
-        pad = chunk - cap % chunk
-        tiles_dev = np.concatenate(
-            [tiles_dev, np.zeros((n_dev, pad, NCOLS), np.int32)], axis=1)
-        cap += pad
+    tiles_dev, chunk = _pad_tile_chunks(
+        plan_tiles_for_devices(catalog, n_dev, healthy), chunk_tiles)
 
     def job2(feats_l, tiles_l):
         feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
@@ -214,16 +253,91 @@ def match_catalog_dist(feats, catalog: TileCatalog, mesh: Mesh,
 
     shard = jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(axis)),
                           out_specs=P(axis)))
-    out_a, out_b = [], []
-    for lo in range(0, cap, chunk):
-        part = tiles_dev[:, lo:lo + chunk]
-        masks = np.asarray(shard(feats, jnp.asarray(part)))
-        d, ti, ii, jj = np.nonzero(masks)
-        out_a.append(part[d, ti, A_TILE].astype(np.int64) * bm + ii)
-        out_b.append(part[d, ti, B_TILE].astype(np.int64) * bn + jj)
-    if not out_a:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    return np.concatenate(out_a), np.concatenate(out_b)
+    return _score_and_compact(shard, feats, tiles_dev, chunk, bm, bn)
+
+
+def sn_replication_volume(n: int, w: int, n_dev: int, feature_dim: int,
+                          itemsize: int = 4) -> Tuple[int, int]:
+    """Job-2 interconnect bytes *received* across all devices:
+    (boundary replication, full all-gather).
+
+    RepSN replicates only the w−1 boundary rows between adjacent shards —
+    O(n_dev · w · d) — where the generic executors all_gather the whole
+    feature matrix, O(n_dev · n · d). The gap is the SN analog of the
+    paper's map-output-replication accounting (Fig. 12).
+    """
+    if n_dev <= 1:          # single device: the halo ppermute is a
+        return 0, 0         # self-send — nothing crosses the wire
+    n_loc = n // n_dev
+    halo = max(min(w, n) - 1, 0)
+    return (n_dev * halo * feature_dim * itemsize,
+            n_dev * (n - n_loc) * feature_dim * itemsize)
+
+
+def match_sn_dist(feats, w: int, mesh: Mesh, axis: str = "data",
+                  threshold: float = 0.8, impl: str = "xla",
+                  block_m: int = 128, block_n: int = 128,
+                  chunk_tiles: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 1 of Sorted Neighborhood on a mesh, RepSN-style.
+
+    feats (n, d) f32 in *sorted-key order*, row-sharded over ``axis``
+    (n must divide evenly). Device d owns every band pair whose smaller
+    sorted position falls in its shard, and fetches only the w−1 boundary
+    rows of the *next* shard with a neighbor ``ppermute`` — no all-gather
+    (:func:`sn_replication_volume` accounts the byte gap). The shard's
+    band tiles are compiled host-side in shard-local coordinates over the
+    concatenated [local ‖ halo] strip (all catalog predicates are
+    translation-invariant comparisons, and the band itself only depends
+    on col − row) and scored with the catalog kernel; the wrapped halo of
+    the last device is masked out by its tiles' column windows.
+
+    Single-hop halo: requires w − 1 ≤ n/n_dev. Returns compacted stage-1
+    survivor candidates (rows_a, rows_b) as sorted-order host int64
+    arrays; run stage 2 with ``executor.verify_pairs``.
+    """
+    from ..kernels import ops
+
+    n, _ = feats.shape
+    n_dev = int(mesh.shape[axis])
+    if n % n_dev:
+        raise ValueError(f"n={n} not divisible by n_dev={n_dev}")
+    n_loc = n // n_dev
+    we = _w_eff(n, w)
+    halo = we - 1
+    if halo > n_loc:
+        raise ValueError(
+            f"window {w} needs {halo} boundary rows > shard size {n_loc} "
+            "(multi-hop halo exchange not implemented)")
+
+    per_dev = []
+    for dev in range(n_dev):
+        c1 = min(n - dev * n_loc, n_loc + halo)   # last shard: mask the wrap
+        per_dev.append(_task_tiles(0, n_loc, 1, c1 - 1, True, dev,
+                                   block_m, block_n, band=we))
+    cap = max(1, max(t.shape[0] for t in per_dev))
+    tiles_dev = np.zeros((n_dev, cap, NCOLS), np.int32)
+    for dev, t in enumerate(per_dev):
+        tiles_dev[dev, :t.shape[0]] = t
+    tiles_dev, chunk = _pad_tile_chunks(tiles_dev, chunk_tiles)
+
+    perm = [(s, (s - 1) % n_dev) for s in range(n_dev)]
+
+    def job2(feats_l, tiles_l):
+        if halo:
+            nbr = jax.lax.ppermute(feats_l[:halo], axis, perm)
+            feats_cat = jnp.concatenate([feats_l, nbr], axis=0)
+        else:
+            feats_cat = feats_l
+        mask = ops.pair_scores_catalog(
+            feats_cat, feats_cat, tiles_l[0], threshold=threshold,
+            block_m=block_m, block_n=block_n, impl=impl)
+        return mask[None]
+
+    shard = jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(axis)),
+                          out_specs=P(axis)))
+    base = np.arange(n_dev, dtype=np.int64) * n_loc
+    return _score_and_compact(shard, feats, tiles_dev, chunk,
+                              block_m, block_n, base=base)
 
 
 def match_pair_range_dist(feats, codes, lens, plan: PairRangePlan,

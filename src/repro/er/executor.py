@@ -18,7 +18,7 @@ never O(P) host-side pair indices — the previous ``np.triu_indices`` /
 edit-distance verification (``verify_pairs``) runs only on the compacted
 stage-1 survivors.
 
-Catalog column layout: see ``kernels.pair_sim`` (NCOLS = 12).
+Catalog column layout: see ``kernels.pair_sim`` (NCOLS = 13).
 """
 from __future__ import annotations
 
@@ -31,6 +31,7 @@ import numpy as np
 from ..core.basic import BasicPlan
 from ..core.block_split import BlockSplitPlan
 from ..core.pair_range import PairRangePlan, range_block_segments
+from ..core.sorted_neighborhood import SortedNeighborhoodPlan, band_range_segment
 from ..kernels.pair_sim import NCOLS
 
 __all__ = [
@@ -38,6 +39,7 @@ __all__ = [
     "catalog_for_basic",
     "catalog_for_block_split",
     "catalog_for_pair_range",
+    "catalog_for_sorted_neighborhood",
     "catalog_for_cross",
     "build_catalog",
     "score_catalog",
@@ -47,7 +49,8 @@ __all__ = [
 ]
 
 # Column indices (mirrors kernels.pair_sim's layout comment).
-A_TILE, B_TILE, R0, R1, C0, C1, TRI, LB_R, LB_C, UB_R, UB_C, RED = range(NCOLS)
+(A_TILE, B_TILE, R0, R1, C0, C1, TRI, LB_R, LB_C, UB_R, UB_C, BAND,
+ RED) = range(NCOLS)
 
 _NO_LB = -1           # rows are >= 0, so row > -1 always holds
 _NO_UB = 2 ** 30      # rows are < 2^30, so row < 2^30 always holds
@@ -72,11 +75,14 @@ class TileCatalog:
 def _task_tiles(a0: int, alen: int, b0: int, blen: int, tri: bool,
                 reducer: int, bm: int, bn: int,
                 lb: Tuple[int, int] = (_NO_LB, _NO_LB),
-                ub: Tuple[int, int] = (_NO_UB, _NO_UB)) -> np.ndarray:
+                ub: Tuple[int, int] = (_NO_UB, _NO_UB),
+                band: int = 0) -> np.ndarray:
     """Aligned tiles intersecting one task's [a0, a0+alen) × [b0, b0+blen)
     window. Validity windows/cuts are global-row predicates, so every tile
-    of a task carries the same 10 scalars; triangular tasks drop tiles
-    entirely on/below the diagonal (no row < col cell)."""
+    of a task carries the same scalars; triangular tasks drop tiles
+    entirely on/below the diagonal (no row < col cell), banded tasks
+    additionally drop tiles entirely above the col − row < band diagonal —
+    the tile set hugs the band instead of filling the bounding rectangle."""
     if alen <= 0 or blen <= 0:
         return np.zeros((0, NCOLS), np.int32)
     ii = np.arange(a0 // bm, -(-(a0 + alen) // bm), dtype=np.int64)
@@ -85,6 +91,12 @@ def _task_tiles(a0: int, alen: int, b0: int, blen: int, tri: bool,
     tii, tjj = tii.ravel(), tjj.ravel()
     if tri:
         keep = np.maximum(tii * bm, a0) < np.minimum((tjj + 1) * bn, b0 + blen)
+        tii, tjj = tii[keep], tjj[keep]
+    if band > 0:
+        # Some cell with col − row < band: min over the tile∩window of
+        # (col − row) is clipped_col_start − (clipped_row_end − 1).
+        keep = (np.maximum(tjj * bn, b0)
+                < np.minimum((tii + 1) * bm, a0 + alen) + band - 1)
         tii, tjj = tii[keep], tjj[keep]
     t = np.empty((tii.size, NCOLS), np.int32)
     t[:, A_TILE] = tii
@@ -96,6 +108,7 @@ def _task_tiles(a0: int, alen: int, b0: int, blen: int, tri: bool,
     t[:, TRI] = int(tri)
     t[:, LB_R], t[:, LB_C] = lb
     t[:, UB_R], t[:, UB_C] = ub
+    t[:, BAND] = band
     t[:, RED] = reducer
     return t
 
@@ -162,6 +175,30 @@ def catalog_for_pair_range(plan: PairRangePlan, block_m: int = 128,
                   plan.r, plan.total_pairs)
 
 
+def catalog_for_sorted_neighborhood(plan: SortedNeighborhoodPlan,
+                                    block_m: int = 128,
+                                    block_n: int = 128) -> TileCatalog:
+    """Compile the window-w band over the sort order (features must be in
+    sorted-key order). Range k ∩ band = rows i_lo..i_hi with a prefix cut
+    at (i_lo, j_lo) and a suffix cut at (i_hi, j_hi) — the PairRange
+    corner-cut machinery — plus the band predicate col − row < w, the
+    first non-block-aligned tile geometry in the catalog vocabulary.
+    Tiles are pruned to the ones actually intersecting the band."""
+    n, we = plan.n, plan.w_eff
+    parts = []
+    for k in range(plan.r):
+        seg = band_range_segment(plan, k)
+        if seg is None:
+            continue
+        i_lo, j_lo, i_hi, j_hi = seg
+        c0 = i_lo + 1
+        c1 = min(i_hi + we, n)
+        parts.append(_task_tiles(
+            i_lo, i_hi - i_lo + 1, c0, c1 - c0, True, k, block_m, block_n,
+            lb=(i_lo, j_lo), ub=(i_hi, j_hi), band=we))
+    return _stack(parts, block_m, block_n, n, n, plan.r, plan.total_pairs)
+
+
 def catalog_for_cross(n_a: int, n_b: int, r: int = 1, block_m: int = 128,
                       block_n: int = 128) -> TileCatalog:
     """Full cartesian A × B (the match_⊥(R, R_∅) job): one rectangular
@@ -176,13 +213,15 @@ def catalog_for_cross(n_a: int, n_b: int, r: int = 1, block_m: int = 128,
 
 
 def build_catalog(plan, block_m: int = 128, block_n: int = 128) -> TileCatalog:
-    """Dispatch on plan type (Basic / BlockSplit / PairRange)."""
+    """Dispatch on plan type (Basic / BlockSplit / PairRange / SN)."""
     if isinstance(plan, BasicPlan):
         return catalog_for_basic(plan, block_m, block_n)
     if isinstance(plan, BlockSplitPlan):
         return catalog_for_block_split(plan, block_m, block_n)
     if isinstance(plan, PairRangePlan):
         return catalog_for_pair_range(plan, block_m, block_n)
+    if isinstance(plan, SortedNeighborhoodPlan):
+        return catalog_for_sorted_neighborhood(plan, block_m, block_n)
     raise TypeError(f"no catalog compiler for {type(plan).__name__}")
 
 
@@ -317,6 +356,8 @@ def enumerate_catalog_pairs(catalog: TileCatalog) -> Tuple[np.ndarray, np.ndarra
             keep &= rows < cols
         keep &= (rows > e[LB_R]) | (cols >= e[LB_C])
         keep &= (rows < e[UB_R]) | (cols <= e[UB_C])
+        if e[BAND]:
+            keep &= cols - rows < e[BAND]
         ii, jj = np.nonzero(keep)
         out_a.append(rows[ii, 0])
         out_b.append(cols[0, jj])

@@ -38,10 +38,16 @@ from ..core import (
     pairs_of_range,
 )
 from ..core.pair_range import map_output_size as pair_range_map_output_size
+from ..core.sorted_neighborhood import (
+    map_output_size as sn_map_output_size,
+    pairs_of_band_range,
+    plan_sorted_neighborhood,
+)
 from ..core.two_source import TwoSourceBDM, plan_pair_range_2src, pairs_of_range_2src
-from .blocking import prefix_block_ids
+from .blocking import prefix_block_ids, sn_sort_order
 from .encode import encode_titles, ngram_features
-from .executor import build_catalog, catalog_for_cross, match_catalog
+from .executor import (build_catalog, catalog_for_cross,
+                       catalog_for_sorted_neighborhood, match_catalog)
 
 __all__ = ["ERConfig", "ERResult", "run_er"]
 
@@ -51,10 +57,12 @@ _CHUNK = 65_536
 @dataclass
 class ERConfig:
     strategy: str = "pair_range"       # basic | block_split | pair_range
+                                       # | sorted_neighborhood
     r: int = 32                        # reduce tasks
     m: int = 8                         # map tasks / input partitions
     threshold: float = 0.8
     prefix_len: int = 3
+    window: int = 10                   # SN sliding-window size w
     feature_dim: int = 256
     max_len: int = 64
     filter_margin: float = 0.25
@@ -71,9 +79,10 @@ class ERResult:
     total_pairs: int
     reducer_pairs: np.ndarray          # (r,) planned pair loads
     map_output_size: int               # kv-pairs emitted by map (Fig. 12)
-    bdm_seconds: float
+    bdm_seconds: float                 # Job-1 time (BDM, or the SN sort)
     reducer_seconds: np.ndarray        # (r,) measured matching time
     extra: Dict = field(default_factory=dict)
+    config: Optional[ERConfig] = None  # the (fresh) config this run used
 
     @property
     def makespan_seconds(self) -> float:
@@ -133,12 +142,89 @@ def _tile_pairs(a0: int, alen: int, b0: int, blen: int, tri: bool):
     return a0 + x.ravel(), b0 + y.ravel()
 
 
-def run_er(titles: Sequence[str], config: ERConfig = ERConfig(),
+def _run_er_sorted_neighborhood(titles: Sequence[str], cfg: ERConfig) -> ERResult:
+    """Sorted Neighborhood: sort by key, range-partition the window-w band
+    over the sort order into r balanced reduce tasks, match the band.
+
+    Job 1 is the sort (no BDM — the band's pair count is a pure function
+    of (n, w), so there is no block skew to measure); Job 2 runs through
+    the tile-catalog executor with the band-diagonal geometry, or the
+    reference per-reducer numpy loop. Every entity has a sort key, so SN
+    has no match_⊥ decomposition.
+    """
+    n = len(titles)
+    codes, lens = encode_titles(titles, max_len=cfg.max_len)
+    feats = ngram_features(codes, dim=cfg.feature_dim, lengths=lens)
+
+    t0 = time.perf_counter()
+    order = sn_sort_order(titles)
+    plan = plan_sorted_neighborhood(n, cfg.window, cfg.r)
+    sort_seconds = time.perf_counter() - t0
+    map_out = sn_map_output_size(plan)
+
+    s_feats = feats[order]
+    s_codes = codes[order]
+    s_lens = lens[order]
+
+    matches: Set[Tuple[int, int]] = set()
+    reducer_seconds = np.zeros(cfg.r)
+    total = plan.total_pairs
+    extra: Dict = {"window": cfg.window, "w_eff": plan.w_eff}
+    if cfg.executor == "catalog":
+        catalog = catalog_for_sorted_neighborhood(plan, cfg.block_m, cfg.block_n)
+        extra["catalog_tiles"] = catalog.num_tiles
+        t0 = time.perf_counter()
+        ha, hb = match_catalog(
+            catalog, s_feats, s_codes, s_lens,
+            threshold=cfg.threshold, filter_margin=cfg.filter_margin,
+            impl=cfg.kernel_impl)
+        elapsed = time.perf_counter() - t0
+        for a, b in zip(order[ha], order[hb]):
+            matches.add((min(int(a), int(b)), max(int(a), int(b))))
+        if total:
+            reducer_seconds = (elapsed * np.asarray(plan.reducer_pairs,
+                                                    np.float64) / total)
+    elif cfg.executor == "reference":
+        for k in range(cfg.r):
+            ra, rb = pairs_of_band_range(plan, k)
+            if ra.size == 0:
+                continue
+            t0 = time.perf_counter()
+            ha, hb = _match_pairs_chunked(
+                s_feats, s_codes, s_lens, ra, rb,
+                cfg.threshold, cfg.filter_margin)
+            reducer_seconds[k] = time.perf_counter() - t0
+            for a, b in zip(order[ha], order[hb]):
+                matches.add((min(int(a), int(b)), max(int(a), int(b))))
+    else:
+        raise ValueError(f"unknown executor {cfg.executor!r}")
+
+    return ERResult(
+        matches=matches,
+        total_pairs=int(total),
+        reducer_pairs=np.asarray(plan.reducer_pairs, np.int64),
+        map_output_size=int(map_out),
+        bdm_seconds=sort_seconds,
+        reducer_seconds=reducer_seconds,
+        extra=extra,
+        config=cfg,
+    )
+
+
+def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
            block_ids: Optional[np.ndarray] = None) -> ERResult:
     """Match a single source. ``block_ids`` overrides prefix blocking (used
-    by the Fig. 9 skew study)."""
+    by the Fig. 9 skew study; ignored by ``strategy="sorted_neighborhood"``,
+    which partitions a sliding window over the sort order, not blocks).
+
+    ``config=None`` builds a fresh default ``ERConfig`` per call (a shared
+    mutable default instance would leak mutations across calls); the
+    resolved config is returned on ``ERResult.config``.
+    """
     n = len(titles)
-    cfg = config
+    cfg = config if config is not None else ERConfig()
+    if cfg.strategy == "sorted_neighborhood":
+        return _run_er_sorted_neighborhood(titles, cfg)
     if block_ids is None:
         block_ids, _ = prefix_block_ids(titles, k=cfg.prefix_len)
     block_ids = np.asarray(block_ids, np.int64)
@@ -295,4 +381,5 @@ def run_er(titles: Sequence[str], config: ERConfig = ERConfig(),
         bdm_seconds=bdm_seconds,
         reducer_seconds=reducer_seconds,
         extra=extra,
+        config=cfg,
     )

@@ -50,19 +50,22 @@ __all__ = ["pair_scores", "pair_scores_catalog", "catalog_tile_mask", "NCOLS"]
 #   6 tri      1 → keep only row < col (intra-block tasks)
 #   7 lb_r, 8 lb_c   lower corner cut: keep (row > lb_r) | (col >= lb_c)
 #   9 ub_r, 10 ub_c  upper corner cut: keep (row < ub_r) | (col <= ub_c)
-#  11 reducer  owning reduce task (host-side attribution / device routing)
-NCOLS = 12
+#  11 band     > 0 → keep only col − row < band (Sorted Neighborhood's
+#              window-w diagonal band, band = w; 0 = unconstrained)
+#  12 reducer  owning reduce task (host-side attribution / device routing)
+NCOLS = 13
 
 
 def catalog_tile_mask(entry, gi, gj):
     """The membership predicate of one catalog entry, shared by the Pallas
-    kernel and the XLA reference. ``entry`` holds the 12 int32 scalars,
+    kernel and the XLA reference. ``entry`` holds the NCOLS int32 scalars,
     ``gi``/``gj`` the (bm, bn) global row/col index grids."""
     keep = (gi >= entry[2]) & (gi < entry[3])
     keep &= (gj >= entry[4]) & (gj < entry[5])
     keep &= (entry[6] == 0) | (gi < gj)
     keep &= (gi > entry[7]) | (gj >= entry[8])
     keep &= (gi < entry[9]) | (gj <= entry[10])
+    keep &= (entry[11] == 0) | (gj - gi < entry[11])
     return keep
 
 

@@ -1,0 +1,19 @@
+"""Shared test configuration.
+
+``--executor`` selects the ``ERConfig.executor`` used by the end-to-end
+tests that honor the ``executor`` fixture — CI runs the tier-1 suite once
+per leg (catalog | reference) so both execution paths stay green.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--executor", action="store", default="catalog",
+        choices=("catalog", "reference"),
+        help="ERConfig.executor for executor-parameterized tests")
+
+
+@pytest.fixture
+def executor(request) -> str:
+    return request.config.getoption("--executor")

@@ -1,0 +1,47 @@
+"""Windowed-pair brute-force oracle for Sorted Neighborhood tests.
+
+Enumerates the window-w band directly — one numpy diagonal per sort-order
+distance d ∈ [1, w), O(n·w) pairs total — with no planner, catalog, or
+kernel machinery involved, then applies the pipeline's two-stage match
+(numpy cosine filter at threshold − margin, exact edit-distance verify at
+threshold via the shared ``verify_pairs`` primitive — the enumeration and
+stage-1 filter are the parts under test; stage 2 is the same exact
+verifier every path shares). The parity suite asserts
+``run_er(strategy="sorted_neighborhood")`` produces exactly this set.
+"""
+import numpy as np
+
+from repro.er.blocking import sn_sort_order
+from repro.er.encode import encode_titles, ngram_features
+from repro.er.executor import verify_pairs
+
+
+def sn_oracle_matches(titles, w, *, threshold=0.8, filter_margin=0.25,
+                      feature_dim=256, max_len=64):
+    """The exact SN match set as {(i, j), i < j} original-index pairs."""
+    order = sn_sort_order(titles)
+    codes, lens = encode_titles(titles, max_len=max_len)
+    feats = ngram_features(codes, dim=feature_dim, lengths=lens)
+    f, c, l = feats[order], codes[order], lens[order]
+    n = len(titles)
+    cand_a, cand_b = [], []
+    for d in range(1, min(w, n)):                 # one band diagonal at a time
+        a = np.arange(0, n - d, dtype=np.int64)
+        b = a + d
+        cos = np.einsum("pd,pd->p", f[a], f[b])
+        sel = np.flatnonzero(cos >= threshold - filter_margin)
+        cand_a.append(a[sel])
+        cand_b.append(b[sel])
+    ca = np.concatenate(cand_a) if cand_a else np.zeros(0, np.int64)
+    cb = np.concatenate(cand_b) if cand_b else np.zeros(0, np.int64)
+    ha, hb = verify_pairs(c, l, c, l, ca, cb, threshold)
+    matches = set()
+    for i, j in zip(ha, hb):
+        ga, gb = int(order[i]), int(order[j])
+        matches.add((min(ga, gb), max(ga, gb)))
+    return matches
+
+
+def sn_band_pairs_bruteforce(n, w):
+    """Every band pair as a set {(i, j)} over sorted positions, O(n·w)."""
+    return {(i, j) for i in range(n) for j in range(i + 1, min(i + w, n))}

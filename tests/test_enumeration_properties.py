@@ -11,7 +11,10 @@ the invariants everything else rests on:
     conserves total work;
   * BlockSplit match tasks cover each split block's pair set exactly
     once (disjoint ∪ exhaustive);
-  * the jnp closed-form inverse equals the numpy oracle for every p.
+  * the jnp closed-form inverse equals the numpy oracle for every p;
+  * the Sorted Neighborhood band enumeration bijects onto [0, P), its
+    range partition covers every band pair exactly once, and the O(r)
+    closed-form map_output_size equals the brute-force gather count.
 """
 import numpy as np
 import pytest
@@ -20,6 +23,7 @@ pytest.importorskip("hypothesis")  # optional dep — skip, don't kill collectio
 from hypothesis import given, settings, strategies as st
 
 from repro.core import enumeration as en
+from repro.core import sorted_neighborhood as sn
 from repro.core.assignment import greedy_lpt
 from repro.core import (compute_bdm, entity_indices, plan_block_split,
                         plan_pair_range, pairs_of_range)
@@ -129,6 +133,51 @@ def test_pair_range_materialization_partitions(sizes, r):
             assert t not in seen
             seen.add(t)
     assert len(seen) == plan.total_pairs
+
+
+@given(st.integers(0, 300), st.integers(1, 40))
+@settings(max_examples=60, deadline=None)
+def test_sn_band_index_bijection(n, w):
+    total = sn.band_pair_count(n, w)
+    assert total == sum(min(w - 1, n - 1 - i) for i in range(max(n - 1, 0)))
+    if total == 0:
+        return
+    p = np.arange(total, dtype=np.int64)
+    i, j = sn.invert_band_index(p, n, w)
+    assert (0 <= i).all() and (i < j).all() and (j < n).all()
+    assert (j - i < max(w, 2)).all()
+    np.testing.assert_array_equal(sn.band_pair_index(i, j, n, w), p)
+
+
+@given(st.integers(0, 250), st.integers(1, 30), st.integers(1, 24))
+@settings(max_examples=60, deadline=None)
+def test_sn_ranges_partition_band(n, w, r):
+    """Every band pair lands in exactly one reduce task; loads conserve."""
+    plan = sn.plan_sorted_neighborhood(n, w, r)
+    seen = set()
+    for k in range(r):
+        ra, rb = sn.pairs_of_band_range(plan, k)
+        assert ra.shape == rb.shape == (int(plan.reducer_pairs[k]),)
+        for t in zip(ra.tolist(), rb.tolist()):
+            assert t not in seen
+            seen.add(t)
+    want = {(i, j) for i in range(n) for j in range(i + 1, min(i + w, n))}
+    assert seen == want
+    assert int(plan.reducer_pairs.sum()) == plan.total_pairs == len(want)
+
+
+@given(st.integers(0, 200), st.integers(1, 30), st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_sn_map_output_size_closed_form(n, w, r):
+    """O(r) gather-interval math == brute-force per-pair gather count."""
+    plan = sn.plan_sorted_neighborhood(n, w, r)
+    brute = 0
+    for k in range(r):
+        ra, rb = sn.pairs_of_band_range(plan, k)
+        brute += len(set(ra.tolist()) | set(rb.tolist()))
+        ivs = sn.band_range_intervals(plan, k)
+        assert len(ivs) <= 2                     # the ≤2-interval bound
+    assert sn.map_output_size(plan) == brute
 
 
 @given(sizes_strategy, st.integers(1, 6))

@@ -103,6 +103,28 @@ def test_edit_distance_matches_reference():
     np.testing.assert_array_equal(got, want)
 
 
+def test_default_config_fresh_per_call():
+    """run_er must not share a mutable default ERConfig across calls:
+    the default is None → a fresh instance, returned on ERResult.config,
+    so mutating a returned config cannot leak into later calls."""
+    import inspect
+
+    from repro.er.pipeline import run_er as _run_er
+
+    assert inspect.signature(_run_er).parameters["config"].default is None
+    titles = ["abc laptop pro 0001", "abc laptop pro 0002",
+              "abd phone max 0003", "abd phone max 0004"]
+    res1 = run_er(titles)
+    assert res1.config is not None and res1.config.threshold == 0.8
+    res1.config.threshold = 0.0          # sabotage the returned config
+    res1.config.strategy = "basic"
+    res2 = run_er(titles)                # fresh default, unaffected
+    assert res2.config is not res1.config
+    assert res2.config.threshold == 0.8
+    assert res2.config.strategy == "pair_range"
+    assert res2.matches == res1.matches
+
+
 def test_ngram_features_unit_norm_and_determinism():
     titles = ["acme laptop", "acme laptop", "zzz", "ab"]
     f1 = ngram_features(titles, dim=64)
