@@ -1,0 +1,99 @@
+"""Serving throughput: queries/sec vs batch size on the resident index.
+
+Corpus blocking follows the Fig. 9 robustness setup at s = 1.0 — block
+sizes |Φ_k| ∝ e^{−s·k} over b blocks, realized as distinct 3-char
+prefixes so the service's own prefix blocking recovers exactly that skew
+(the regime where Basic degrades >10× and the balanced two-source plans
+must not). Queries are perturbed corpus samples (same generator as the
+dataset ground truth) plus a few null-key entries, streamed at each
+bucket size after a warmup; reported per batch size: queries/sec,
+batches/sec, planned cross pairs per query, and the steady-state XLA
+compile count (must be 0 — the shape-bucket contract).
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.er import ERService, ServiceConfig, compile_counter
+from repro.er.blocking import exponential_block_sizes
+from repro.er.datasets import _WORDS, _perturb, _prefixes
+
+from .common import print_table, save_rows, timer
+
+
+def skewed_corpus(n: int, b: int, s: float, seed: int = 0):
+    """Titles whose 3-char-prefix blocks realize the Fig. 9 exponential
+    skew |Φ_k| ∝ e^{−s·k}."""
+    rng = np.random.default_rng(seed)
+    sizes = exponential_block_sizes(n, b, s)
+    prefixes, _ = _prefixes(b)
+    titles = []
+    for blk, size in enumerate(sizes):
+        w = rng.integers(0, len(_WORDS), (size, 2))
+        serial = rng.integers(0, 10_000, size)
+        titles.extend(
+            f"{prefixes[blk]} {_WORDS[a]} {_WORDS[c]} {v:04d}"
+            for a, c, v in zip(w[:, 0], w[:, 1], serial))
+    rng.shuffle(titles)
+    return titles, rng
+
+
+def run(n: int = 20_000, b: int = 100, batches_per_size: int = 20,
+        quick: bool = False):
+    if quick:
+        n, batches_per_size = 4_000, 6
+    titles, rng = skewed_corpus(n, b, s=1.0)
+    cfg = ServiceConfig(feature_dim=128, max_len=48, r=32, m=8,
+                        query_buckets=(8, 32, 128, 512), tile_chunk=256)
+
+    with timer() as t_ingest:
+        svc = ERService(titles, cfg)
+    with compile_counter() as warm, timer() as t_warm:
+        svc.warmup()
+
+    def make_batch(size: int):
+        out = []
+        for _ in range(size):
+            src = titles[int(rng.integers(0, len(titles)))]
+            out.append("" if rng.random() < 0.02 else _perturb(rng, src))
+        return out
+
+    rows = []
+    for size in cfg.query_buckets:
+        pre = dict(svc.stats)
+        with compile_counter() as steady, timer() as t:
+            for _ in range(batches_per_size):
+                svc.match(make_batch(size))
+        nq = batches_per_size * size
+        planned = svc.stats["planned_pairs"] - pre["planned_pairs"]
+        rows.append({
+            "batch_size": size,
+            "batches": batches_per_size,
+            "queries_per_s": round(nq / max(t.seconds, 1e-9), 1),
+            "batches_per_s": round(batches_per_size / max(t.seconds, 1e-9), 2),
+            "ms_per_batch": round(1e3 * t.seconds / batches_per_size, 2),
+            "planned_pairs_per_q": round(planned / max(nq, 1), 1),
+            "matches": svc.stats["matches"] - pre["matches"],
+            "steady_compiles": steady.count,
+        })
+    meta = {
+        "n_corpus": n, "blocks": b, "skew_s": 1.0,
+        "ingest_s": round(t_ingest.seconds, 3),
+        "warmup_s": round(t_warm.seconds, 3),
+        "warmup_compiles": warm.count,
+    }
+    print_table(f"serve_bench — resident index, Fig. 9 skew s=1.0 "
+                f"(n={n}, b={b})", rows)
+    print("meta:", meta)
+    save_rows("serve_bench", [dict(r, **meta) for r in rows])
+    bad = [r for r in rows if r["steady_compiles"]]
+    assert not bad, f"steady-state recompiles: {bad}"
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--smoke" in sys.argv)

@@ -11,6 +11,7 @@ from .bdm import (  # noqa: F401
     compute_bdm_jnp,
     entity_indices,
     entity_indices_jnp,
+    update_bdm,
 )
 from .block_split import BlockSplitPlan, plan_block_split  # noqa: F401
 from .sorted_neighborhood import (  # noqa: F401
@@ -35,4 +36,5 @@ from .two_source import (  # noqa: F401
     pairs_of_range_2src,
     plan_block_split_2src,
     plan_pair_range_2src,
+    range_block_segments_2src,
 )

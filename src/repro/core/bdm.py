@@ -26,6 +26,7 @@ import numpy as np
 __all__ = [
     "compute_bdm",
     "compute_bdm_jnp",
+    "update_bdm",
     "entity_indices",
     "entity_indices_jnp",
     "blocked_layout",
@@ -38,6 +39,34 @@ def compute_bdm(block_ids: np.ndarray, partition_ids: np.ndarray,
     flat = np.asarray(block_ids, np.int64) * num_partitions + np.asarray(partition_ids, np.int64)
     counts = np.bincount(flat, minlength=num_blocks * num_partitions)
     return counts.reshape(num_blocks, num_partitions).astype(np.int64)
+
+
+def update_bdm(bdm: np.ndarray, block_ids: np.ndarray,
+               partition_ids: np.ndarray,
+               num_blocks: int | None = None) -> np.ndarray:
+    """Incremental Job 1: fold a new entity batch into an existing BDM.
+
+    Because the BDM is a pure per-(block, partition) count, it is a monoid
+    under elementwise addition — ``update_bdm(compute_bdm(A), B) ==
+    compute_bdm(A ++ B)`` for any split, which is what lets a resident
+    service absorb query micro-batches without replanning Job 1 from
+    scratch. Never-seen blocks grow the matrix by appending zero rows
+    (block ids must stay dense); ``num_blocks`` forces growth to at least
+    that many rows even when the batch is empty. The partition count is
+    pinned to ``bdm.shape[1]``. Returns a new (b', m) int64 matrix with
+    b' >= bdm.shape[0]; the input is never mutated.
+    """
+    bdm = np.asarray(bdm, np.int64)
+    b, m = bdm.shape
+    block_ids = np.asarray(block_ids, np.int64)
+    partition_ids = np.asarray(partition_ids, np.int64)
+    nb = max(b, num_blocks or 0,
+             int(block_ids.max()) + 1 if block_ids.size else 0)
+    out = np.zeros((nb, m), np.int64)
+    out[:b] = bdm
+    if block_ids.size:
+        out += compute_bdm(block_ids, partition_ids, nb, m)
+    return out
 
 
 def compute_bdm_jnp(block_ids, partition_ids, num_blocks: int, num_partitions: int):

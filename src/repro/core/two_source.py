@@ -13,6 +13,7 @@ constant blocking key for the ⊥ jobs.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import List, Tuple
 
 import numpy as np
 
@@ -26,6 +27,7 @@ __all__ = [
     "plan_block_split_2src",
     "plan_pair_range_2src",
     "pairs_of_range_2src",
+    "range_block_segments_2src",
 ]
 
 
@@ -59,6 +61,8 @@ class BlockSplit2Plan:
     task_b_start: np.ndarray     # rows in S layout
     task_b_len: np.ndarray
     total_pairs: int
+    n_rows_r: int = 0            # total rows in the R blocked layout
+    n_rows_s: int = 0            # total rows in the S blocked layout
 
 
 def plan_block_split_2src(bdm2: TwoSourceBDM, r: int) -> BlockSplit2Plan:
@@ -109,7 +113,7 @@ def plan_block_split_2src(bdm2: TwoSourceBDM, r: int) -> BlockSplit2Plan:
         task_pairs=w, task_reducer=assignment, reducer_pairs=loads,
         task_a_start=np.asarray(a0, np.int64), task_a_len=np.asarray(al, np.int64),
         task_b_start=np.asarray(b0, np.int64), task_b_len=np.asarray(bl, np.int64),
-        total_pairs=total)
+        total_pairs=total, n_rows_r=int(sr.sum()), n_rows_s=int(ss.sum()))
 
 
 @dataclass(frozen=True)
@@ -127,6 +131,14 @@ class PairRange2Plan:
     @property
     def reducer_pairs(self) -> np.ndarray:
         return (self.bounds[:, 1] - self.bounds[:, 0]).astype(np.int64)
+
+    @property
+    def n_rows_r(self) -> int:
+        return int(self.sizes_r.sum())
+
+    @property
+    def n_rows_s(self) -> int:
+        return int(self.sizes_s.sum())
 
 
 def plan_pair_range_2src(bdm2: TwoSourceBDM, r: int) -> PairRange2Plan:
@@ -149,3 +161,35 @@ def pairs_of_range_2src(plan: PairRange2Plan, k: int):
     q = p - plan.offsets[block]
     x, y = en.invert_cell_index_2src(q, plan.sizes_s[block])
     return block, x, y, plan.er_start[block] + x, plan.es_start[block] + y
+
+
+def range_block_segments_2src(plan: PairRange2Plan,
+                              k: int) -> List[Tuple[int, int, int, int, int]]:
+    """Per-block cell segments of range k: [(block, x_lo, y_lo, x_hi, y_hi)].
+
+    Range k's pair-index interval [lo, hi) intersected with block ``blk``
+    is a contiguous run of the row-major rectangular enumeration
+    ``c(x, y) = x·N_S + y``: a prefix-cut first row, full middle rows, a
+    suffix-cut last row — the rectangular analog of
+    ``pair_range.range_block_segments``, and exactly what the tile-catalog
+    compiler turns into lb/ub corner-cut predicates. O(1) per (range,
+    block); only non-empty segments are returned, coordinates block-local.
+    """
+    lo, hi = map(int, plan.bounds[k])
+    if hi <= lo:
+        return []
+    offsets, counts = plan.offsets, plan.pair_counts
+    b_lo = int(np.searchsorted(offsets, lo, side="right")) - 1
+    b_hi = int(np.searchsorted(offsets, hi - 1, side="right")) - 1
+    out = []
+    for blk in range(b_lo, b_hi + 1):
+        npairs = int(counts[blk])
+        if npairs == 0:
+            continue
+        qlo = max(lo - int(offsets[blk]), 0)
+        qhi = min(hi - int(offsets[blk]), npairs) - 1
+        if qhi < qlo:
+            continue
+        ns = int(plan.sizes_s[blk])
+        out.append((blk, qlo // ns, qlo % ns, qhi // ns, qhi % ns))
+    return out

@@ -17,7 +17,8 @@ from .executor import (  # noqa: F401
     score_catalog,
     verify_pairs,
 )
-from .pipeline import ERConfig, ERResult, run_er  # noqa: F401
+from .pipeline import ERConfig, ERResult, cross_restrict, featurize, run_er  # noqa: F401
+from .service import ERService, ServiceConfig, compile_counter  # noqa: F401
 from .similarity import (  # noqa: F401
     cosine_scores,
     edit_distance,

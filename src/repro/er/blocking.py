@@ -12,8 +12,19 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["prefix_block_ids", "dense_block_ids", "exponential_block_ids",
-           "exponential_block_sizes", "sn_sort_keys", "sn_sort_order"]
+__all__ = ["prefix_key", "prefix_block_ids", "dense_block_ids",
+           "exponential_block_ids", "exponential_block_sizes",
+           "sn_sort_keys", "sn_sort_order"]
+
+
+def prefix_key(title: str, k: int = 3) -> str | None:
+    """The paper's blocking key for one entity: first k letters of the
+    normalized title, or None when no key can be formed (→ block −1,
+    the match_⊥ decomposition). THE single definition of the key rule —
+    the batch pipeline and the resident service must derive identical
+    keys or the streaming ≡ batch contract breaks."""
+    key = title.strip().lower()[:k]
+    return key if key else None
 
 
 def prefix_block_ids(titles: Sequence[str], k: int = 3) -> Tuple[np.ndarray, List[str]]:
@@ -27,8 +38,8 @@ def prefix_block_ids(titles: Sequence[str], k: int = 3) -> Tuple[np.ndarray, Lis
     keys: dict[str, int] = {}
     names: List[str] = []
     for i, t in enumerate(titles):
-        key = t.strip().lower()[:k]
-        if len(key) < 1:
+        key = prefix_key(t, k)
+        if key is None:
             ids[i] = -1
             continue
         if key not in keys:

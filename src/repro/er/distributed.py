@@ -57,12 +57,16 @@ from .similarity import two_stage_match
 __all__ = [
     "compute_bdm_sharded",
     "match_catalog_dist",
+    "match_catalog_2src_dist",
+    "make_catalog_2src_scorer",
+    "score_tiles_2src",
     "match_pair_range_dist",
     "match_sn_dist",
     "match_shards_hostplan",
     "device_assignment",
     "plan_rows_for_devices",
     "plan_tiles_for_devices",
+    "pad_device_tiles",
     "sn_replication_volume",
 ]
 
@@ -190,14 +194,17 @@ def _score_and_compact(shard, feats, tiles_dev, chunk: int, bm: int, bn: int,
     """Drive a jitted per-shard catalog scorer chunk by chunk and compact
     each chunk's (n_dev, chunk, bm, bn) survivor masks into global
     (rows_a, rows_b) — host memory stays O(n_dev · chunk · bm · bn)
-    regardless of plan size. ``base`` (n_dev,) shifts device-local tile
-    coordinates to global rows (the RepSN local-coordinate path); None
-    means the tiles already carry global strip indices."""
+    regardless of plan size. ``feats`` is one array or a tuple of scorer
+    operands (the two-source path passes (corpus, queries)); ``base``
+    (n_dev,) shifts device-local tile coordinates to global rows (the
+    RepSN local-coordinate path); None means the tiles already carry
+    global strip indices."""
+    operands = feats if isinstance(feats, tuple) else (feats,)
     cap = tiles_dev.shape[1]
     out_a, out_b = [], []
     for lo in range(0, cap, chunk):
         part = tiles_dev[:, lo:lo + chunk]
-        masks = np.asarray(shard(feats, jnp.asarray(part)))
+        masks = np.asarray(shard(*operands, jnp.asarray(part)))
         d, ti, ii, jj = np.nonzero(masks)
         off = base[d] if base is not None else 0
         out_a.append(off + part[d, ti, A_TILE].astype(np.int64) * bm + ii)
@@ -254,6 +261,85 @@ def match_catalog_dist(feats, catalog: TileCatalog, mesh: Mesh,
     shard = jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(axis)),
                           out_specs=P(axis)))
     return _score_and_compact(shard, feats, tiles_dev, chunk, bm, bn)
+
+
+def pad_device_tiles(tiles_dev: np.ndarray, chunk: int) -> np.ndarray:
+    """Pad the per-device tile cap UP to a multiple of ``chunk`` (>= one
+    full chunk) with all-zero entries, so every chunk a scorer sees has
+    the exact shape (n_dev, chunk, NCOLS) — unlike :func:`_pad_tile_chunks`
+    which shrinks the chunk to the cap. This is the fixed-shape contract
+    the resident service's recompile guard depends on."""
+    n_dev, cap = tiles_dev.shape[:2]
+    padded = max(chunk, -(-cap // chunk) * chunk)
+    if padded != cap:
+        tiles_dev = np.concatenate(
+            [tiles_dev, np.zeros((n_dev, padded - cap, NCOLS), np.int32)],
+            axis=1)
+    return tiles_dev
+
+
+def make_catalog_2src_scorer(mesh: Mesh, axis: str = "data", *,
+                             threshold: float, block_m: int = 128,
+                             block_n: int = 128, impl: str = "xla"):
+    """Build ONE jitted sharded-index scorer for query-vs-corpus catalogs.
+
+    Data flow (the service's sharded-index variant): the corpus feature
+    matrix is row-sharded over ``axis`` (each device owns a corpus
+    shard), the query batch is replicated (broadcast — micro-batches are
+    tiny next to the corpus), tile shards route reducer → device
+    round-robin exactly as in :func:`match_catalog_dist`, and each device
+    all_gathers the corpus shard ring to score its tiles against the full
+    blocked layout (blocks span shard boundaries, so the gather is the
+    shuffle, as in the paper).
+
+    Returns ``scorer(corpus_feats_sharded, query_feats, tiles_chunk)`` →
+    (n_dev, chunk, bm, bn) survivor masks. Build it once per resident
+    service and reuse it for every micro-batch: jit caches by the wrapped
+    function's identity, so a per-call closure would retrace every batch.
+    """
+    from ..kernels import ops
+
+    def job2(feats_l, feats_q, tiles_l):
+        feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
+        mask = ops.pair_scores_catalog(
+            feats_g, feats_q, tiles_l[0], threshold=threshold,
+            block_m=block_m, block_n=block_n, impl=impl)
+        return mask[None]
+
+    return jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(), P(axis)),
+                         out_specs=P(axis)))
+
+
+def score_tiles_2src(scorer, feats_a, feats_b, tiles_dev: np.ndarray,
+                     chunk: int, bm: int, bn: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Drive a :func:`make_catalog_2src_scorer` over per-device tile
+    shards, ``chunk`` tiles per device at a time (``tiles_dev`` must be
+    pre-padded via :func:`pad_device_tiles` so every chunk has one shape),
+    compacting each chunk's masks into global (rows_a, rows_b)."""
+    return _score_and_compact(scorer, (feats_a, jnp.asarray(feats_b)),
+                              tiles_dev, chunk, bm, bn)
+
+
+def match_catalog_2src_dist(feats_a, feats_b, catalog: TileCatalog,
+                            mesh: Mesh, axis: str = "data",
+                            threshold: float = 0.8, impl: str = "xla",
+                            healthy: Optional[np.ndarray] = None,
+                            chunk_tiles: int = 1024
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """One-shot sharded-index cross matcher: stage 1 of a two-source
+    catalog with the corpus (a-side) row-sharded over ``axis`` and the
+    query batch (b-side) replicated. Builds a fresh scorer — resident
+    services should hold a :func:`make_catalog_2src_scorer` instead and
+    drive it through :func:`score_tiles_2src`."""
+    n_dev = int(mesh.shape[axis])
+    scorer = make_catalog_2src_scorer(
+        mesh, axis, threshold=threshold, block_m=catalog.block_m,
+        block_n=catalog.block_n, impl=impl)
+    tiles_dev = pad_device_tiles(
+        plan_tiles_for_devices(catalog, n_dev, healthy), chunk_tiles)
+    return score_tiles_2src(scorer, feats_a, feats_b, tiles_dev,
+                            chunk_tiles, catalog.block_m, catalog.block_n)
 
 
 def sn_replication_volume(n: int, w: int, n_dev: int, feature_dim: int,

@@ -32,6 +32,8 @@ from ..core.basic import BasicPlan
 from ..core.block_split import BlockSplitPlan
 from ..core.pair_range import PairRangePlan, range_block_segments
 from ..core.sorted_neighborhood import SortedNeighborhoodPlan, band_range_segment
+from ..core.two_source import (BlockSplit2Plan, PairRange2Plan,
+                               range_block_segments_2src)
 from ..kernels.pair_sim import NCOLS
 
 __all__ = [
@@ -41,7 +43,9 @@ __all__ = [
     "catalog_for_pair_range",
     "catalog_for_sorted_neighborhood",
     "catalog_for_cross",
+    "catalog_for_two_source",
     "build_catalog",
+    "pad_catalog_tiles",
     "score_catalog",
     "verify_pairs",
     "match_catalog",
@@ -212,8 +216,49 @@ def catalog_for_cross(n_a: int, n_b: int, r: int = 1, block_m: int = 128,
                        total_pairs=n_a * n_b)
 
 
+def catalog_for_two_source(plan, block_m: int = 128,
+                           block_n: int = 128) -> TileCatalog:
+    """Compile a two-source R × S plan (paper Appendix I) to cross tiles.
+
+    The a-side indexes the R blocked layout, the b-side the S blocked
+    layout — two *different* feature matrices, so every task is
+    rectangular (tri=False). BlockSplit2's match-task table is already
+    tile geometry; PairRange2's range ∩ block is a contiguous run of the
+    row-major rectangular enumeration — rows x_lo..x_hi with a prefix cut
+    at (x_lo, y_lo) and a suffix cut at (x_hi, y_hi), the same lb/ub
+    corner-cut predicates the single-source compiler uses (they are plain
+    row/col comparisons, agnostic to triangular vs rectangular cells).
+    This is the query-vs-corpus hot path of ``er/service.ERService``.
+    """
+    if isinstance(plan, BlockSplit2Plan):
+        parts = [
+            _task_tiles(int(plan.task_a_start[t]), int(plan.task_a_len[t]),
+                        int(plan.task_b_start[t]), int(plan.task_b_len[t]),
+                        False, int(plan.task_reducer[t]), block_m, block_n)
+            for t in range(plan.task_block.shape[0])
+        ]
+        return _stack(parts, block_m, block_n, plan.n_rows_r, plan.n_rows_s,
+                      plan.r, plan.total_pairs)
+    if isinstance(plan, PairRange2Plan):
+        parts = []
+        for k in range(plan.r):
+            for blk, x_lo, y_lo, x_hi, y_hi in range_block_segments_2src(plan, k):
+                e0r = int(plan.er_start[blk])
+                e0s = int(plan.es_start[blk])
+                ns = int(plan.sizes_s[blk])
+                c0 = e0s + (y_lo if x_hi == x_lo else 0)
+                c1 = e0s + (y_hi + 1 if x_hi == x_lo else ns)
+                parts.append(_task_tiles(
+                    e0r + x_lo, x_hi - x_lo + 1, c0, c1 - c0, False, k,
+                    block_m, block_n,
+                    lb=(e0r + x_lo, e0s + y_lo), ub=(e0r + x_hi, e0s + y_hi)))
+        return _stack(parts, block_m, block_n, plan.n_rows_r, plan.n_rows_s,
+                      plan.r, plan.total_pairs)
+    raise TypeError(f"no two-source catalog compiler for {type(plan).__name__}")
+
+
 def build_catalog(plan, block_m: int = 128, block_n: int = 128) -> TileCatalog:
-    """Dispatch on plan type (Basic / BlockSplit / PairRange / SN)."""
+    """Dispatch on plan type (Basic / BlockSplit / PairRange / SN / 2src)."""
     if isinstance(plan, BasicPlan):
         return catalog_for_basic(plan, block_m, block_n)
     if isinstance(plan, BlockSplitPlan):
@@ -222,7 +267,26 @@ def build_catalog(plan, block_m: int = 128, block_n: int = 128) -> TileCatalog:
         return catalog_for_pair_range(plan, block_m, block_n)
     if isinstance(plan, SortedNeighborhoodPlan):
         return catalog_for_sorted_neighborhood(plan, block_m, block_n)
+    if isinstance(plan, (BlockSplit2Plan, PairRange2Plan)):
+        return catalog_for_two_source(plan, block_m, block_n)
     raise TypeError(f"no catalog compiler for {type(plan).__name__}")
+
+
+def pad_catalog_tiles(catalog: TileCatalog, multiple: int) -> TileCatalog:
+    """Pad the tile table to a multiple of ``multiple`` rows with all-zero
+    entries (empty validity window r0 == r1 == 0 → no survivors), so a
+    chunked scorer sees only one chunk shape — the shape-bucketing the
+    serving path relies on for zero steady-state recompiles."""
+    t = catalog.num_tiles
+    padded = max(multiple, -(-t // multiple) * multiple)
+    if padded == t:
+        return catalog
+    tiles = np.concatenate(
+        [catalog.tiles, np.zeros((padded - t, NCOLS), np.int32)], axis=0)
+    return TileCatalog(tiles=tiles, block_m=catalog.block_m,
+                       block_n=catalog.block_n, n_rows_a=catalog.n_rows_a,
+                       n_rows_b=catalog.n_rows_b, r=catalog.r,
+                       total_pairs=catalog.total_pairs)
 
 
 # ---------------------------------------------------------------------------

@@ -49,9 +49,28 @@ from .encode import encode_titles, ngram_features
 from .executor import (build_catalog, catalog_for_cross,
                        catalog_for_sorted_neighborhood, match_catalog)
 
-__all__ = ["ERConfig", "ERResult", "run_er"]
+__all__ = ["ERConfig", "ERResult", "run_er", "featurize", "cross_restrict"]
 
 _CHUNK = 65_536
+
+
+def featurize(titles: Sequence[str], cfg) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared featurization for the batch pipeline and the resident service:
+    (codes, lens) for the exact stage-2 verifier plus the hashed n-gram
+    filter features. ``cfg`` needs ``max_len`` and ``feature_dim``
+    (ERConfig and ServiceConfig both qualify)."""
+    codes, lens = encode_titles(titles, max_len=cfg.max_len)
+    feats = ngram_features(codes, dim=cfg.feature_dim, lengths=lens)
+    return codes, lens, feats
+
+
+def cross_restrict(matches: Set[Tuple[int, int]],
+                   n_left: int) -> Set[Tuple[int, int]]:
+    """Restrict a ``run_er`` match set over ``left ++ right`` to cross
+    pairs, re-based as (left_idx, right_local_idx) — exactly what an
+    ``ERService`` holding ``left`` resident must return for queries
+    ``right`` (the streaming ≡ batch equivalence oracle)."""
+    return {(a, b - n_left) for a, b in matches if a < n_left <= b}
 
 
 @dataclass
@@ -153,8 +172,7 @@ def _run_er_sorted_neighborhood(titles: Sequence[str], cfg: ERConfig) -> ERResul
     has no match_⊥ decomposition.
     """
     n = len(titles)
-    codes, lens = encode_titles(titles, max_len=cfg.max_len)
-    feats = ngram_features(codes, dim=cfg.feature_dim, lengths=lens)
+    codes, lens, feats = featurize(titles, cfg)
 
     t0 = time.perf_counter()
     order = sn_sort_order(titles)
@@ -237,8 +255,7 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     keyed_idx = np.flatnonzero(keyed)
 
     # ---- featurize once (shared by both jobs) ----
-    codes, lens = encode_titles(titles, max_len=cfg.max_len)
-    feats = ngram_features(codes, dim=cfg.feature_dim, lengths=lens)
+    codes, lens, feats = featurize(titles, cfg)
 
     # ---- Job 1: BDM ----
     t0 = time.perf_counter()

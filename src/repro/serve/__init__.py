@@ -1,1 +1,5 @@
+"""Serving namespace: LM decode loop plus the resident entity-resolution
+match service (the ER analog of a decode server — ingest once, answer
+micro-batches from a warm compiled-shape cache)."""
+from ..er.service import ERService, ServiceConfig, compile_counter  # noqa: F401
 from .decode import generate, make_decode_step, make_prefill  # noqa: F401

@@ -26,7 +26,7 @@ from repro.core import enumeration as en
 from repro.core import sorted_neighborhood as sn
 from repro.core.assignment import greedy_lpt
 from repro.core import (compute_bdm, entity_indices, plan_block_split,
-                        plan_pair_range, pairs_of_range)
+                        plan_pair_range, pairs_of_range, update_bdm)
 from repro.core.pair_range import pairs_of_range_jnp
 
 sizes_strategy = st.lists(st.integers(0, 60), min_size=1, max_size=30)
@@ -178,6 +178,37 @@ def test_sn_map_output_size_closed_form(n, w, r):
         ivs = sn.band_range_intervals(plan, k)
         assert len(ivs) <= 2                     # the ≤2-interval bound
     assert sn.map_output_size(plan) == brute
+
+
+@given(st.lists(st.tuples(st.integers(0, 12), st.integers(0, 3)),
+                min_size=0, max_size=60),
+       st.lists(st.integers(0, 59), min_size=0, max_size=6),
+       st.integers(0, 5))
+@settings(max_examples=60, deadline=None)
+def test_update_bdm_is_compute_bdm_of_concat(stream, cut_points, extra_blocks):
+    """Incremental Job 1: folding a (block, partition) stream into the BDM
+    batch by batch — ANY split, empty batches included, never-seen blocks
+    growing the matrix — equals the one-shot compute_bdm of the
+    concatenation. This is the monoid property the resident service's
+    ``match()`` path leans on."""
+    m = 4
+    blocks = np.asarray([b for b, _ in stream], np.int64)
+    parts = np.asarray([p for _, p in stream], np.int64)
+    nb = int(blocks.max()) + 1 if blocks.size else 0
+    nb_forced = nb + extra_blocks            # trailing never-seen blocks
+    want = compute_bdm(blocks, parts, nb_forced, m)
+
+    cuts = sorted({min(c, len(stream)) for c in cut_points})
+    edges = [0] + cuts + [len(stream)]
+    bdm = np.zeros((0, m), np.int64)         # empty seed: identity element
+    for lo, hi in zip(edges[:-1], edges[1:]):  # empty slices allowed
+        bdm = update_bdm(bdm, blocks[lo:hi], parts[lo:hi])
+    bdm = update_bdm(bdm, np.zeros(0, np.int64), np.zeros(0, np.int64),
+                     num_blocks=nb_forced)   # growth without entities
+    np.testing.assert_array_equal(bdm, want)
+    # a second empty fold is a no-op, and the input is never mutated
+    again = update_bdm(bdm, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    np.testing.assert_array_equal(again, want)
 
 
 @given(sizes_strategy, st.integers(1, 6))
