@@ -80,7 +80,7 @@ def _stage1_numpy(feats, plan, strategy, estart, sizes, threshold):
     (triu_indices / meshgrid / closed-form inverse), filter with chunked
     paired-dot einsum. Returns the survivor pair set size + arrays."""
     from repro.core import pairs_of_range
-    from repro.er.pipeline import _tile_pairs
+    from repro.er.compiler import enumerate_task_pairs as _tile_pairs
 
     cand_a, cand_b = [], []
 

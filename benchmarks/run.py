@@ -24,7 +24,7 @@ def main(argv=None):
 
     from . import (fig8_datasets, fig9_skew, fig10_reduce_tasks,
                    fig11_sorted, fig12_map_output, fig13_scaling,
-                   fig_sn_window, kernel_bench)
+                   fig_sn_window, kernel_bench, schedule_bench)
 
     suites = {
         "fig8": lambda: fig8_datasets.run(quick=args.quick),
@@ -35,6 +35,7 @@ def main(argv=None):
         "fig13": lambda: fig13_scaling.run(quick=args.quick),
         "sn_window": lambda: fig_sn_window.run(quick=args.quick),
         "kernels": lambda: kernel_bench.run(quick=args.quick),
+        "schedule": lambda: schedule_bench.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     t0 = time.time()

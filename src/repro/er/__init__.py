@@ -1,5 +1,6 @@
 """Entity-resolution substrate: featurization, blocking, similarity,
-datasets, the end-to-end pipeline (paper Fig. 2), and the shard_map
+datasets, the end-to-end pipeline (paper Fig. 2), the unified match-job
+compiler (plan → catalog → schedule → execute) and the shard_map
 distributed runtime."""
 from .blocking import (  # noqa: F401
     dense_block_ids,
@@ -10,13 +11,21 @@ from .blocking import (  # noqa: F401
 )
 from .datasets import Dataset, make_products, make_publications  # noqa: F401
 from .encode import encode_titles, ngram_features  # noqa: F401
-from .executor import (  # noqa: F401
+from .compiler import (  # noqa: F401
+    MatchJob,
+    Schedule,
     TileCatalog,
-    build_catalog,
+    cross_job,
+    execute,
+    lower,
     match_catalog,
+    plan_to_job,
+    schedule_tiles,
     score_catalog,
+    tile_costs,
     verify_pairs,
 )
+from .executor import build_catalog  # noqa: F401
 from .pipeline import ERConfig, ERResult, cross_restrict, featurize, run_er  # noqa: F401
 from .service import ERService, ServiceConfig, compile_counter  # noqa: F401
 from .similarity import (  # noqa: F401

@@ -1,0 +1,60 @@
+"""Unified match-job compiler: one plan → catalog → schedule → execute
+pipeline (DESIGN.md §Compiler).
+
+Every strategy — Basic / BlockSplit / PairRange self-joins, the Sorted
+Neighborhood band, two-source R × S query jobs and the match_⊥ cross
+jobs — flows through the same four stages:
+
+  1. **Plan IR** (`ir.py`): the planner's output lowers into a
+     :class:`MatchJob` — a flat table of corner-cut task rectangles over
+     the blocked feature layout(s). `plan_to_job` is the only
+     strategy-aware code in the whole execution stack.
+  2. **Lowering** (`lower.py`): `lower(job) -> TileCatalog` tiles every
+     task into MXU-aligned catalog entries — the single implementation
+     behind what used to be six per-strategy `catalog_for_*` builders.
+  3. **Scheduling** (`schedule.py`): an exact per-tile cost model (the
+     live masked-pair count under the tile's predicates) feeds
+     `core.assignment.greedy_lpt` to assign tiles → reducers → devices;
+     `Schedule.stats()` reports the imbalance the paper optimizes.
+  4. **Execution** (`execute.py`): one generic `execute(catalog,
+     feats_*, mesh=...)` scores any catalog — single host, all-gather
+     self-join, replicated-query cross join, or RepSN halo exchange —
+     through the fused kernel, replacing the per-strategy shard_map
+     wrappers.
+
+`er/executor.py` and `er/distributed.py` keep their historical entry
+points as thin shims over this package.
+"""
+from .ir import (  # noqa: F401
+    A_TILE, B_TILE, R0, R1, C0, C1, TRI, LB_R, LB_C, UB_R, UB_C, BAND, RED,
+    NCOLS,
+    MatchJob,
+    TileCatalog,
+    cross_job,
+    make_job,
+    plan_to_job,
+    task_row,
+)
+from .lower import (  # noqa: F401
+    enumerate_catalog_pairs,
+    enumerate_task_pairs,
+    lower,
+    pad_catalog,
+    pad_tiles,
+    task_tiles,
+)
+from .schedule import (  # noqa: F401
+    Schedule,
+    apply_schedule,
+    device_assignment,
+    schedule_tiles,
+    tile_costs,
+    tiles_for_devices,
+)
+from .execute import (  # noqa: F401
+    execute,
+    make_scorer,
+    match_catalog,
+    score_catalog,
+    verify_pairs,
+)

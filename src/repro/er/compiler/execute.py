@@ -1,0 +1,302 @@
+"""Execution: one generic driver for every lowered + scheduled catalog.
+
+``execute(catalog, feats_a, ...)`` runs stage 1 (kernel cosine filter)
+for ANY match job — single host or on a device mesh — and returns the
+compacted survivor candidates; ``verify_pairs`` is the exact stage 2 and
+``match_catalog`` fuses the two. The mesh path covers the three data
+flows that used to be separate near-duplicate shard_map wrappers:
+
+  * **self** — self-join: features row-sharded, each device all_gathers
+    them and scores its tile shard (the shuffle of the paper's Job 2).
+  * **cross** — two-source: the a-side (corpus) row-sharded and
+    gathered, the b-side (query batch) replicated.
+  * **halo** — RepSN: features row-sharded in sorted order, each device
+    fetches only the halo boundary rows of the next shard via a
+    neighbor ``ppermute`` instead of all-gathering; tiles are in
+    shard-local coordinates and ``base`` shifts survivors back to
+    global rows.
+
+``make_scorer`` builds the jitted per-shard scorer ONCE — resident
+services hold one and reuse it for every micro-batch (jit caches by
+function identity, so a per-call closure would retrace every batch).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .ir import A_TILE, B_TILE, NCOLS, TileCatalog
+from .lower import pad_tiles
+from .schedule import Schedule, tiles_for_devices
+
+__all__ = [
+    "execute",
+    "make_scorer",
+    "score_catalog",
+    "verify_pairs",
+    "match_catalog",
+]
+
+
+# shard_map moved from jax.experimental to the top-level namespace (with
+# check_rep renamed check_vma) across the jax versions we support; every
+# shard_map call site in the repo goes through this shim.
+try:
+    _shard_map_new = jax.shard_map
+
+    def _smap(f, mesh, in_specs, out_specs):
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def _smap(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        # Interpret-mode Pallas is a Python emulator — on a non-TPU
+        # backend the batched-matmul XLA path IS the production path.
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def _pad_pow2(t: int, cap: int) -> int:
+    p = 1
+    while p < t:
+        p *= 2
+    return min(p, cap)
+
+
+# ---------------------------------------------------------------------------
+# Single-host stage 1
+# ---------------------------------------------------------------------------
+
+def score_catalog(feats_a, catalog: TileCatalog, feats_b=None, *,
+                  threshold: float, impl: str = "auto",
+                  chunk_tiles: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 1 for a whole catalog on one host: survivor candidate pairs.
+
+    Runs the catalog through the kernel in fixed-size chunks (padded to
+    powers of two so jit caches a handful of shapes), compacts each
+    chunk's (chunk, bm, bn) survivor mask into global (row_a, row_b)
+    indices. Returns two int64 arrays.
+    """
+    from ...kernels import ops
+
+    impl = _resolve_impl(impl)
+    if feats_b is None:
+        feats_b = feats_a
+    fa = jnp.asarray(feats_a)
+    fb = jnp.asarray(feats_b)
+    tiles = catalog.tiles
+    bm, bn = catalog.block_m, catalog.block_n
+    t_total = tiles.shape[0]
+    out_a, out_b = [], []
+    for lo in range(0, t_total, chunk_tiles):
+        chunk = tiles[lo:lo + chunk_tiles]
+        padded = _pad_pow2(chunk.shape[0], chunk_tiles)
+        if padded != chunk.shape[0]:
+            # Empty entries: zero windows (r0 == r1) mask everything out.
+            pad = np.zeros((padded - chunk.shape[0], NCOLS), np.int32)
+            chunk = np.concatenate([chunk, pad], axis=0)
+        mask = np.asarray(ops.pair_scores_catalog(
+            fa, fb, jnp.asarray(chunk), threshold=threshold,
+            block_m=bm, block_n=bn, impl=impl))
+        ti, ii, jj = np.nonzero(mask)
+        out_a.append(chunk[ti, A_TILE].astype(np.int64) * bm + ii)
+        out_b.append(chunk[ti, B_TILE].astype(np.int64) * bn + jj)
+    if not out_a:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(out_a), np.concatenate(out_b)
+
+
+# ---------------------------------------------------------------------------
+# Mesh stage 1
+# ---------------------------------------------------------------------------
+
+def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
+                threshold: float, block_m: int = 128, block_n: int = 128,
+                impl: str = "xla", halo: int = 0):
+    """Build ONE jitted per-shard catalog scorer for the given data flow.
+
+    mode="self":  scorer(feats_sharded, tiles_chunk)
+    mode="cross": scorer(feats_a_sharded, feats_b_replicated, tiles_chunk)
+    mode="halo":  scorer(feats_sharded, tiles_chunk) — neighbor ppermute
+                  of ``halo`` boundary rows instead of an all-gather;
+                  tiles index the [local ‖ halo] strip.
+
+    Each returns (n_dev, chunk, bm, bn) survivor masks. Build it once per
+    resident service / driver and reuse it: jit caches by the wrapped
+    function's identity, so a per-call closure would retrace every batch.
+    """
+    from ...kernels import ops
+
+    def _score(a, b, tiles_l):
+        mask = ops.pair_scores_catalog(
+            a, b, tiles_l[0], threshold=threshold,
+            block_m=block_m, block_n=block_n, impl=impl)
+        return mask[None]
+
+    if mode == "self":
+        def job2(feats_l, tiles_l):
+            feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
+            return _score(feats_g, feats_g, tiles_l)
+        in_specs = (P(axis), P(axis))
+    elif mode == "cross":
+        def job2(feats_l, feats_q, tiles_l):
+            feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
+            return _score(feats_g, feats_q, tiles_l)
+        in_specs = (P(axis), P(), P(axis))
+    elif mode == "halo":
+        n_dev = int(mesh.shape[axis])
+        perm = [(s, (s - 1) % n_dev) for s in range(n_dev)]
+
+        def job2(feats_l, tiles_l):
+            if halo:
+                nbr = jax.lax.ppermute(feats_l[:halo], axis, perm)
+                feats_cat = jnp.concatenate([feats_l, nbr], axis=0)
+            else:
+                feats_cat = feats_l
+            return _score(feats_cat, feats_cat, tiles_l)
+        in_specs = (P(axis), P(axis))
+    else:
+        raise ValueError(f"unknown scorer mode {mode!r}")
+
+    return jax.jit(_smap(job2, mesh, in_specs=in_specs, out_specs=P(axis)))
+
+
+def _score_and_compact(shard, operands, tiles_dev, chunk: int,
+                       bm: int, bn: int,
+                       base: Optional[np.ndarray] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Drive a jitted per-shard catalog scorer chunk by chunk and compact
+    each chunk's (n_dev, chunk, bm, bn) survivor masks into global
+    (rows_a, rows_b) — host memory stays O(n_dev · chunk · bm · bn)
+    regardless of plan size. ``base`` (n_dev,) shifts device-local tile
+    coordinates to global rows (the RepSN local-coordinate path); None
+    means the tiles already carry global strip indices."""
+    cap = tiles_dev.shape[1]
+    out_a, out_b = [], []
+    for lo in range(0, cap, chunk):
+        part = tiles_dev[:, lo:lo + chunk]
+        masks = np.asarray(shard(*operands, jnp.asarray(part)))
+        d, ti, ii, jj = np.nonzero(masks)
+        off = base[d] if base is not None else 0
+        out_a.append(off + part[d, ti, A_TILE].astype(np.int64) * bm + ii)
+        out_b.append(off + part[d, ti, B_TILE].astype(np.int64) * bn + jj)
+    if not out_a:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(out_a), np.concatenate(out_b)
+
+
+def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
+            threshold: float, impl: str = "auto",
+            mesh: Optional[Mesh] = None, axis: str = "data",
+            chunk_tiles: int = 1024,
+            schedule: Optional[Schedule] = None,
+            healthy: Optional[np.ndarray] = None,
+            scorer=None, fixed_chunks: bool = False,
+            halo: int = 0, base: Optional[np.ndarray] = None
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 1 of ANY lowered catalog: compacted survivor candidates.
+
+    Single host (``mesh=None``): chunked :func:`score_catalog`.
+    On a mesh: tiles route to devices via the :class:`Schedule` (cost-LPT
+    placement) or round-robin when none is given, and each device scores
+    its shard through a :func:`make_scorer` data flow — "self" when
+    ``feats_b`` is None, "cross" when it is given (b replicated), "halo"
+    when ``halo > 0`` (RepSN boundary replication; implies self-join,
+    ``base`` shifts local survivor coordinates to global rows).
+
+    ``fixed_chunks=True`` pads every device shard UP to a ``chunk_tiles``
+    multiple so each kernel launch has the exact shape (n_dev,
+    chunk_tiles, NCOLS) — the resident service's recompile guard;
+    the default shrinks the chunk to the shard cap for one-shot jobs.
+    Pass ``scorer=`` to reuse a prebuilt :func:`make_scorer` (required
+    for zero steady-state recompiles).
+
+    Returns host int64 (rows_a, rows_b); run stage 2 via
+    :func:`verify_pairs`.
+    """
+    if mesh is None:
+        return score_catalog(feats_a, catalog, feats_b,
+                             threshold=threshold, impl=impl,
+                             chunk_tiles=chunk_tiles)
+    n_dev = int(mesh.shape[axis])
+    bm, bn = catalog.block_m, catalog.block_n
+    tiles_dev = tiles_for_devices(catalog, n_dev, healthy, schedule)
+    if fixed_chunks:
+        chunk = chunk_tiles
+    else:
+        chunk = min(chunk_tiles, max(tiles_dev.shape[1], 1))
+    tiles_dev = pad_tiles(tiles_dev, chunk)
+    if scorer is None:
+        mode = "halo" if halo > 0 else ("cross" if feats_b is not None
+                                        else "self")
+        scorer = make_scorer(mesh, axis, mode=mode, threshold=threshold,
+                             block_m=bm, block_n=bn,
+                             impl=_resolve_impl(impl), halo=halo)
+    operands = ((feats_a,) if feats_b is None
+                else (feats_a, jnp.asarray(feats_b)))
+    return _score_and_compact(scorer, operands, tiles_dev, chunk, bm, bn,
+                              base=base)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2 + the fused entry point
+# ---------------------------------------------------------------------------
+
+_VERIFY_CHUNK = 8_192
+
+
+def verify_pairs(codes_a, lens_a, codes_b, lens_b, rows_a, rows_b,
+                 threshold: float,
+                 chunk: int = _VERIFY_CHUNK) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 2: exact normalized edit similarity >= threshold on candidate
+    row pairs, in fixed-size padded chunks (one jit compilation)."""
+    from ..similarity import edit_similarity
+
+    hit_a, hit_b = [], []
+    for lo in range(0, rows_a.shape[0], chunk):
+        a = rows_a[lo:lo + chunk]
+        b = rows_b[lo:lo + chunk]
+        pad = chunk - a.shape[0]
+        if pad:
+            a = np.concatenate([a, np.zeros(pad, a.dtype)])
+            b = np.concatenate([b, np.zeros(pad, b.dtype)])
+        sim = np.array(edit_similarity(
+            codes_a[a], lens_a[a], codes_b[b], lens_b[b]))
+        if pad:
+            sim[chunk - pad:] = 0.0
+        sel = np.flatnonzero(sim >= threshold)
+        hit_a.append(a[sel])
+        hit_b.append(b[sel])
+    if not hit_a:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(hit_a), np.concatenate(hit_b)
+
+
+def match_catalog(catalog: TileCatalog, feats_a, codes_a, lens_a, *,
+                  feats_b=None, codes_b=None, lens_b=None,
+                  threshold: float = 0.8, filter_margin: float = 0.25,
+                  impl: str = "auto", mesh: Optional[Mesh] = None,
+                  axis: str = "data", schedule: Optional[Schedule] = None,
+                  chunk_tiles: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused filter-and-verify: kernel stage 1 over the tile catalog,
+    exact stage 2 on compacted survivors. Returns matched (rows_a, rows_b)
+    — indices into the a-side (and b-side, if distinct) arrays."""
+    cand_a, cand_b = execute(
+        catalog, feats_a, feats_b,
+        threshold=threshold - filter_margin, impl=impl,
+        mesh=mesh, axis=axis, schedule=schedule, chunk_tiles=chunk_tiles)
+    if codes_b is None:
+        codes_b, lens_b = codes_a, lens_a
+    return verify_pairs(codes_a, lens_a, codes_b, lens_b,
+                        cand_a, cand_b, threshold)

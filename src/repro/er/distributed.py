@@ -4,54 +4,44 @@ Mapping (DESIGN.md §2): input partition Π_i ↔ per-device row shard on the
 ``data`` (× ``pod``) mesh axis; the shuffle ↔ ``all_gather`` on ICI; a
 reduce task ↔ a work shard executed by one device. The number of logical
 reduce tasks ``r`` stays decoupled from the device count ``n_dev`` exactly
-as in the paper (r = 10·n there): device ``d`` executes reducers
-``{k : k mod n_dev = d}`` (round-robin), which is also the straggler/
-elasticity unit — see :func:`device_assignment`.
+as in the paper (r = 10·n there).
 
 Job 1 (:func:`compute_bdm_sharded`): each device bincounts its local
 blocking keys — its BDM *column* — then one ``all_gather`` produces the
 full b × m matrix, replicated. This is Alg. 3 with the footnote-2 combiner
 (the local bincount) built in.
 
-Job 2, three executors:
-  * :func:`match_catalog_dist` — THE generic fused path (any strategy):
-    the host compiles the plan to a tile catalog (er/executor.py), tiles
-    are routed reducer → device round-robin, and every device scores its
-    padded tile shard with the catalog kernel over the all-gathered
-    features. O(#tiles) metadata crosses the host/device boundary, never
-    O(P) pair indices; stage-2 verify runs host-side on the compacted
-    survivors.
-  * :func:`match_pair_range_dist` — PairRange fully in-jit: every device
-    derives its own pair list from the tiny replicated plan arrays
-    (sizes/offsets/estart) via the closed-form inverse — the paper's
-    map-side "relevant ranges" computation. No host-side pair
-    materialization; essential at DS2 scale (6.7·10⁹ pairs).
-  * :func:`match_shards_hostplan` — legacy executor for Basic/BlockSplit
-    (per-device padded row-index arrays, O(P) host memory). Kept for
-    comparison benchmarks; new callers should use the catalog path.
-  * :func:`match_sn_dist` — Sorted Neighborhood, RepSN-style: each device
-    owns the band pairs starting in its shard and replicates only the
-    w−1 boundary rows of the next shard (neighbor ``ppermute``) instead
-    of all-gathering — O(n_dev·w·d) interconnect bytes vs O(n_dev·n·d)
-    (:func:`sn_replication_volume`).
+Job 2 runs through the unified compiler (``er/compiler``): any plan
+lowers to a tile catalog, the cost-LPT scheduler places tiles on
+reducers and devices, and ``compiler.execute`` scores every shard
+through the fused kernel. The entry points here — ``match_catalog_dist``
+(self-join), ``match_catalog_2src_dist`` (query-vs-corpus) and
+``match_sn_dist`` (RepSN halo exchange) — are thin shims over that one
+executor, kept for their historical signatures. Two genuinely different
+legacy executors remain for comparison benchmarks:
 
-The first three all_gather the (row-sharded) feature/code tensors — the
-collective-volume analog of the paper's map-output replication (Fig. 12);
-the benchmarks account it in bytes.
+  * :func:`match_pair_range_dist` — PairRange fully in-jit: every device
+    derives its own pair list from the tiny replicated plan arrays via
+    the closed-form inverse — the paper's map-side "relevant ranges"
+    computation. No host-side pair materialization.
+  * :func:`match_shards_hostplan` — per-device padded row-index arrays,
+    O(P) host memory. The before-side of the catalog benchmarks.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.pair_range import PairRangePlan, pairs_of_range_jnp
 from ..core.sorted_neighborhood import _w_eff
-from .executor import A_TILE, B_TILE, NCOLS, RED, TileCatalog, _task_tiles
+from .compiler import (MatchJob, TileCatalog, device_assignment, execute,
+                       lower, make_scorer, pad_tiles, tiles_for_devices)
+from .compiler.execute import _score_and_compact, _smap
+from .compiler.ir import make_job, task_row
 from .similarity import two_stage_match
 
 __all__ = [
@@ -69,23 +59,6 @@ __all__ = [
     "pad_device_tiles",
     "sn_replication_volume",
 ]
-
-
-# shard_map moved from jax.experimental to the top-level namespace (with
-# check_rep renamed check_vma) across the jax versions we support; the
-# call sites below go through this shim.
-try:
-    _shard_map_new = jax.shard_map
-
-    def _smap(f, mesh, in_specs, out_specs):
-        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_vma=False)
-except AttributeError:
-    from jax.experimental.shard_map import shard_map as _shard_map_old
-
-    def _smap(f, mesh, in_specs, out_specs):
-        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -107,28 +80,32 @@ def compute_bdm_sharded(block_ids, num_blocks: int, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
-# Reduce-task → device round-robin (straggler / elasticity unit)
+# Tile routing shims (scheduling lives in compiler/schedule.py)
 # ---------------------------------------------------------------------------
 
-def device_assignment(r: int, n_dev: int,
-                      healthy: Optional[np.ndarray] = None) -> np.ndarray:
-    """reducer k → device. Round-robin over the *healthy* devices, so a
-    failed/straggling device's work shards re-spread evenly — the plan is a
-    pure function of (r, healthy mask), recomputable anywhere (the BDM
-    restart argument, DESIGN.md §3)."""
-    if healthy is None:
-        healthy = np.ones(n_dev, bool)
-    alive = np.flatnonzero(healthy)
-    if alive.size == 0:
-        raise ValueError("no healthy devices")
-    return alive[np.arange(r) % alive.size]
+def plan_tiles_for_devices(catalog: TileCatalog, n_dev: int,
+                           healthy: Optional[np.ndarray] = None,
+                           schedule=None) -> np.ndarray:
+    """Partition a tile catalog over devices — see
+    :func:`compiler.tiles_for_devices`. Without a schedule, reducers
+    route round-robin via :func:`device_assignment` (the baseline)."""
+    return tiles_for_devices(catalog, n_dev, healthy, schedule)
+
+
+def pad_device_tiles(tiles_dev: np.ndarray, chunk: int) -> np.ndarray:
+    """Pad the per-device tile cap UP to a multiple of ``chunk`` (>= one
+    full chunk) with all-zero entries — the fixed-shape contract the
+    resident service's recompile guard depends on
+    (:func:`compiler.pad_tiles`)."""
+    return pad_tiles(tiles_dev, chunk)
 
 
 def plan_rows_for_devices(reducer_rows, r: int, n_dev: int,
                           healthy: Optional[np.ndarray] = None
                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Concatenate per-reducer (rows_a, rows_b) into per-device padded
-    arrays (n_dev, cap). Returns (rows_a, rows_b, valid)."""
+    arrays (n_dev, cap). Returns (rows_a, rows_b, valid). Feeds the
+    legacy O(P) :func:`match_shards_hostplan` executor only."""
     dev_of = device_assignment(r, n_dev, healthy)
     per_dev_a = [[] for _ in range(n_dev)]
     per_dev_b = [[] for _ in range(n_dev)]
@@ -151,163 +128,37 @@ def plan_rows_for_devices(reducer_rows, r: int, n_dev: int,
     return rows_a, rows_b, valid
 
 
-def plan_tiles_for_devices(catalog: TileCatalog, n_dev: int,
-                           healthy: Optional[np.ndarray] = None) -> np.ndarray:
-    """Partition a tile catalog over devices: reducer → device round-robin
-    (:func:`device_assignment`), per-device tile lists padded to a common
-    cap with all-zero entries (empty validity window → no survivors).
-    Returns (n_dev, cap, NCOLS) int32 — O(#tiles) metadata, the only
-    plan state that crosses the host/device boundary."""
-    dev_of = device_assignment(catalog.r, n_dev, healthy)
-    dev = dev_of[catalog.tiles[:, RED]] if catalog.num_tiles else \
-        np.zeros(0, np.int64)
-    counts = np.bincount(dev, minlength=n_dev)
-    cap = max(1, int(counts.max()) if counts.size else 1)
-    out = np.zeros((n_dev, cap, NCOLS), np.int32)
-    for d in range(n_dev):
-        mine = catalog.tiles[dev == d]
-        out[d, :mine.shape[0]] = mine
-    return out
-
-
 # ---------------------------------------------------------------------------
-# Job 2 executors
+# Job 2: unified-executor shims
 # ---------------------------------------------------------------------------
-
-def _pad_tile_chunks(tiles_dev: np.ndarray,
-                     chunk_tiles: int) -> Tuple[np.ndarray, int]:
-    """Pad the per-device tile cap to a chunk multiple (zero entries have
-    an empty validity window → no survivors) so every chunk traces with
-    one shape. Returns (padded tiles, chunk size)."""
-    n_dev, cap = tiles_dev.shape[:2]
-    chunk = min(chunk_tiles, max(cap, 1))
-    pad = (-cap) % chunk
-    if pad:
-        tiles_dev = np.concatenate(
-            [tiles_dev, np.zeros((n_dev, pad, NCOLS), np.int32)], axis=1)
-    return tiles_dev, chunk
-
-
-def _score_and_compact(shard, feats, tiles_dev, chunk: int, bm: int, bn: int,
-                       base: Optional[np.ndarray] = None
-                       ) -> Tuple[np.ndarray, np.ndarray]:
-    """Drive a jitted per-shard catalog scorer chunk by chunk and compact
-    each chunk's (n_dev, chunk, bm, bn) survivor masks into global
-    (rows_a, rows_b) — host memory stays O(n_dev · chunk · bm · bn)
-    regardless of plan size. ``feats`` is one array or a tuple of scorer
-    operands (the two-source path passes (corpus, queries)); ``base``
-    (n_dev,) shifts device-local tile coordinates to global rows (the
-    RepSN local-coordinate path); None means the tiles already carry
-    global strip indices."""
-    operands = feats if isinstance(feats, tuple) else (feats,)
-    cap = tiles_dev.shape[1]
-    out_a, out_b = [], []
-    for lo in range(0, cap, chunk):
-        part = tiles_dev[:, lo:lo + chunk]
-        masks = np.asarray(shard(*operands, jnp.asarray(part)))
-        d, ti, ii, jj = np.nonzero(masks)
-        off = base[d] if base is not None else 0
-        out_a.append(off + part[d, ti, A_TILE].astype(np.int64) * bm + ii)
-        out_b.append(off + part[d, ti, B_TILE].astype(np.int64) * bn + jj)
-    if not out_a:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    return np.concatenate(out_a), np.concatenate(out_b)
-
-
-def _match_local(feats, codes, lens, ra, rb, valid, threshold, margin):
-    mask, score = two_stage_match(
-        feats[ra], feats[rb], codes[ra], lens[ra], codes[rb], lens[rb],
-        threshold=threshold, filter_margin=margin)
-    mask = mask & valid
-    return mask, jnp.where(mask, score, 0.0)
-
 
 def match_catalog_dist(feats, catalog: TileCatalog, mesh: Mesh,
                        axis: str = "data", threshold: float = 0.8,
                        impl: str = "xla",
                        healthy: Optional[np.ndarray] = None,
-                       chunk_tiles: int = 1024
+                       chunk_tiles: int = 1024, schedule=None
                        ) -> Tuple[np.ndarray, np.ndarray]:
-    """Stage 1 of any plan on a mesh via the tile-catalog executor.
-
-    feats (n, d) f32 in the blocked layout, row-sharded over ``axis``.
-    Each device all_gathers the features and scores its tile shard
-    (reducer → device round-robin, elasticity via ``healthy``) with the
-    catalog kernel — the per-device work is exactly the plan's reducer
-    loads, so the makespan IS the paper's balance metric. Tile shards are
-    processed ``chunk_tiles`` per device at a time and each chunk's
-    survivor masks are compacted immediately, so host memory stays
-    O(n_dev · chunk_tiles · bm · bn) regardless of plan size. Returns the
+    """Stage 1 of any self-join plan on a mesh: features (n, d) f32 in the
+    blocked layout, row-sharded over ``axis``; each device all_gathers
+    them and scores its tile shard. Thin shim over
+    :func:`compiler.execute` (mode "self"); pass ``schedule=`` for
+    cost-LPT placement instead of the reducer round-robin. Returns the
     compacted stage-1 survivor candidates (rows_a, rows_b) as host int64
-    arrays; run stage 2 with ``executor.verify_pairs``.
-
-    ``impl="xla"`` (default) is shard_map-safe everywhere; pass "pallas"
-    on a TPU backend to run the fused kernel per device.
-    """
-    from ..kernels import ops
-
-    n_dev = int(np.prod([mesh.shape[a] for a in (axis,)]))
-    bm, bn = catalog.block_m, catalog.block_n
-    tiles_dev, chunk = _pad_tile_chunks(
-        plan_tiles_for_devices(catalog, n_dev, healthy), chunk_tiles)
-
-    def job2(feats_l, tiles_l):
-        feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
-        mask = ops.pair_scores_catalog(
-            feats_g, feats_g, tiles_l[0], threshold=threshold,
-            block_m=bm, block_n=bn, impl=impl)
-        return mask[None]
-
-    shard = jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(axis)),
-                          out_specs=P(axis)))
-    return _score_and_compact(shard, feats, tiles_dev, chunk, bm, bn)
-
-
-def pad_device_tiles(tiles_dev: np.ndarray, chunk: int) -> np.ndarray:
-    """Pad the per-device tile cap UP to a multiple of ``chunk`` (>= one
-    full chunk) with all-zero entries, so every chunk a scorer sees has
-    the exact shape (n_dev, chunk, NCOLS) — unlike :func:`_pad_tile_chunks`
-    which shrinks the chunk to the cap. This is the fixed-shape contract
-    the resident service's recompile guard depends on."""
-    n_dev, cap = tiles_dev.shape[:2]
-    padded = max(chunk, -(-cap // chunk) * chunk)
-    if padded != cap:
-        tiles_dev = np.concatenate(
-            [tiles_dev, np.zeros((n_dev, padded - cap, NCOLS), np.int32)],
-            axis=1)
-    return tiles_dev
+    arrays; run stage 2 with ``compiler.verify_pairs``."""
+    return execute(catalog, feats, threshold=threshold, impl=impl,
+                   mesh=mesh, axis=axis, healthy=healthy,
+                   chunk_tiles=chunk_tiles, schedule=schedule)
 
 
 def make_catalog_2src_scorer(mesh: Mesh, axis: str = "data", *,
                              threshold: float, block_m: int = 128,
                              block_n: int = 128, impl: str = "xla"):
-    """Build ONE jitted sharded-index scorer for query-vs-corpus catalogs.
-
-    Data flow (the service's sharded-index variant): the corpus feature
-    matrix is row-sharded over ``axis`` (each device owns a corpus
-    shard), the query batch is replicated (broadcast — micro-batches are
-    tiny next to the corpus), tile shards route reducer → device
-    round-robin exactly as in :func:`match_catalog_dist`, and each device
-    all_gathers the corpus shard ring to score its tiles against the full
-    blocked layout (blocks span shard boundaries, so the gather is the
-    shuffle, as in the paper).
-
-    Returns ``scorer(corpus_feats_sharded, query_feats, tiles_chunk)`` →
-    (n_dev, chunk, bm, bn) survivor masks. Build it once per resident
-    service and reuse it for every micro-batch: jit caches by the wrapped
-    function's identity, so a per-call closure would retrace every batch.
-    """
-    from ..kernels import ops
-
-    def job2(feats_l, feats_q, tiles_l):
-        feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
-        mask = ops.pair_scores_catalog(
-            feats_g, feats_q, tiles_l[0], threshold=threshold,
-            block_m=block_m, block_n=block_n, impl=impl)
-        return mask[None]
-
-    return jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(), P(axis)),
-                         out_specs=P(axis)))
+    """ONE jitted sharded-index scorer for query-vs-corpus catalogs:
+    corpus row-sharded and gathered, query batch replicated — see
+    :func:`compiler.make_scorer` (mode "cross"). Build it once per
+    resident service and reuse it for every micro-batch."""
+    return make_scorer(mesh, axis, mode="cross", threshold=threshold,
+                       block_m=block_m, block_n=block_n, impl=impl)
 
 
 def score_tiles_2src(scorer, feats_a, feats_b, tiles_dev: np.ndarray,
@@ -325,21 +176,17 @@ def match_catalog_2src_dist(feats_a, feats_b, catalog: TileCatalog,
                             mesh: Mesh, axis: str = "data",
                             threshold: float = 0.8, impl: str = "xla",
                             healthy: Optional[np.ndarray] = None,
-                            chunk_tiles: int = 1024
+                            chunk_tiles: int = 1024, schedule=None
                             ) -> Tuple[np.ndarray, np.ndarray]:
     """One-shot sharded-index cross matcher: stage 1 of a two-source
     catalog with the corpus (a-side) row-sharded over ``axis`` and the
     query batch (b-side) replicated. Builds a fresh scorer — resident
     services should hold a :func:`make_catalog_2src_scorer` instead and
-    drive it through :func:`score_tiles_2src`."""
-    n_dev = int(mesh.shape[axis])
-    scorer = make_catalog_2src_scorer(
-        mesh, axis, threshold=threshold, block_m=catalog.block_m,
-        block_n=catalog.block_n, impl=impl)
-    tiles_dev = pad_device_tiles(
-        plan_tiles_for_devices(catalog, n_dev, healthy), chunk_tiles)
-    return score_tiles_2src(scorer, feats_a, feats_b, tiles_dev,
-                            chunk_tiles, catalog.block_m, catalog.block_n)
+    pass it to :func:`compiler.execute`."""
+    return execute(catalog, feats_a, feats_b, threshold=threshold,
+                   impl=impl, mesh=mesh, axis=axis, healthy=healthy,
+                   chunk_tiles=chunk_tiles, schedule=schedule,
+                   fixed_chunks=True)
 
 
 def sn_replication_volume(n: int, w: int, n_dev: int, feature_dim: int,
@@ -371,18 +218,18 @@ def match_sn_dist(feats, w: int, mesh: Mesh, axis: str = "data",
     sorted position falls in its shard, and fetches only the w−1 boundary
     rows of the *next* shard with a neighbor ``ppermute`` — no all-gather
     (:func:`sn_replication_volume` accounts the byte gap). The shard's
-    band tiles are compiled host-side in shard-local coordinates over the
+    band job is compiled host-side in shard-local coordinates over the
     concatenated [local ‖ halo] strip (all catalog predicates are
     translation-invariant comparisons, and the band itself only depends
-    on col − row) and scored with the catalog kernel; the wrapped halo of
-    the last device is masked out by its tiles' column windows.
+    on col − row) as ONE banded task per device with reducer = device —
+    the compiler lowers/routes it like any other MatchJob, and the "halo"
+    executor mode replaces the all-gather; the wrapped halo of the last
+    device is masked out by its task's column window.
 
     Single-hop halo: requires w − 1 ≤ n/n_dev. Returns compacted stage-1
     survivor candidates (rows_a, rows_b) as sorted-order host int64
-    arrays; run stage 2 with ``executor.verify_pairs``.
+    arrays; run stage 2 with ``compiler.verify_pairs``.
     """
-    from ..kernels import ops
-
     n, _ = feats.shape
     n_dev = int(mesh.shape[axis])
     if n % n_dev:
@@ -395,35 +242,30 @@ def match_sn_dist(feats, w: int, mesh: Mesh, axis: str = "data",
             f"window {w} needs {halo} boundary rows > shard size {n_loc} "
             "(multi-hop halo exchange not implemented)")
 
-    per_dev = []
+    rows = []
     for dev in range(n_dev):
         c1 = min(n - dev * n_loc, n_loc + halo)   # last shard: mask the wrap
-        per_dev.append(_task_tiles(0, n_loc, 1, c1 - 1, True, dev,
-                                   block_m, block_n, band=we))
-    cap = max(1, max(t.shape[0] for t in per_dev))
-    tiles_dev = np.zeros((n_dev, cap, NCOLS), np.int32)
-    for dev, t in enumerate(per_dev):
-        tiles_dev[dev, :t.shape[0]] = t
-    tiles_dev, chunk = _pad_tile_chunks(tiles_dev, chunk_tiles)
-
-    perm = [(s, (s - 1) % n_dev) for s in range(n_dev)]
-
-    def job2(feats_l, tiles_l):
-        if halo:
-            nbr = jax.lax.ppermute(feats_l[:halo], axis, perm)
-            feats_cat = jnp.concatenate([feats_l, nbr], axis=0)
-        else:
-            feats_cat = feats_l
-        mask = ops.pair_scores_catalog(
-            feats_cat, feats_cat, tiles_l[0], threshold=threshold,
-            block_m=block_m, block_n=block_n, impl=impl)
-        return mask[None]
-
-    shard = jax.jit(_smap(job2, mesh, in_specs=(P(axis), P(axis)),
-                          out_specs=P(axis)))
+        rows.append(task_row(0, n_loc, 1, c1 - 1, True, dev, band=we))
+    # total_pairs = 0: per-shard band pair counts are owned by the
+    # SortedNeighborhoodPlan; this job is routing geometry only.
+    job: MatchJob = make_job(rows, n_loc + halo, n_loc + halo, n_dev, 0)
+    catalog = lower(job, block_m, block_n)
     base = np.arange(n_dev, dtype=np.int64) * n_loc
-    return _score_and_compact(shard, feats, tiles_dev, chunk,
-                              block_m, block_n, base=base)
+    return execute(catalog, feats, threshold=threshold, impl=impl,
+                   mesh=mesh, axis=axis, chunk_tiles=chunk_tiles,
+                   halo=halo, base=base)
+
+
+# ---------------------------------------------------------------------------
+# Legacy executors (comparison baselines)
+# ---------------------------------------------------------------------------
+
+def _match_local(feats, codes, lens, ra, rb, valid, threshold, margin):
+    mask, score = two_stage_match(
+        feats[ra], feats[rb], codes[ra], lens[ra], codes[rb], lens[rb],
+        threshold=threshold, filter_margin=margin)
+    mask = mask & valid
+    return mask, jnp.where(mask, score, 0.0)
 
 
 def match_pair_range_dist(feats, codes, lens, plan: PairRangePlan,

@@ -1,40 +1,32 @@
-"""Tile-catalog executor: plan → one fused Pallas call (DESIGN.md §Catalog).
+"""Compatibility shims for the tile-catalog executor.
 
-Every load-balancing plan (Basic / BlockSplit / PairRange) describes a set
-of pairs as geometry over the blocked feature layout: triangular tasks
-(whole blocks, sub-blocks k.i), rectangular tasks (cross sub-blocks
-k.i×j), and PairRange's corner-cut triangle segments. This module
-*compiles* that geometry into a flat catalog of MXU-aligned
-(block_m, block_n) tiles — (a_tile, b_tile, validity window, triangular
-flag, corner cuts, reducer) per entry, int32 — and scores the whole
-catalog with the scalar-prefetch kernel ``kernels.pair_sim.
-pair_scores_catalog`` (or its XLA twin on CPU). The paper's >95%-of-
-runtime reduce phase thus runs as one kernel launch per survivor-mask
-chunk instead of a Python per-reducer loop over materialized pair lists.
-
-Memory: the catalog is O(#tiles) = O(#tasks + planned_pairs / (bm·bn)),
-never O(P) host-side pair indices — the previous ``np.triu_indices`` /
-``meshgrid`` path materialized 16 bytes per pair. Stage-2 exact
-edit-distance verification (``verify_pairs``) runs only on the compacted
-stage-1 survivors.
-
-Catalog column layout: see ``kernels.pair_sim`` (NCOLS = 13).
+The plan → catalog → schedule → execute pipeline lives in
+``er/compiler`` (DESIGN.md §Compiler): ``compiler.plan_to_job`` lowers
+any strategy's plan into the MatchJob IR, ``compiler.lower`` tiles it,
+``compiler.schedule_tiles`` places tiles on reducers/devices and
+``compiler.execute`` runs stage 1 anywhere. This module keeps the
+historical entry points — the per-strategy ``catalog_for_*`` builders,
+``build_catalog``, ``score_catalog``/``verify_pairs``/``match_catalog``
+and the pair-enumeration test oracle — as thin wrappers so existing
+callers and tests keep working.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Tuple
-
-import jax
-import numpy as np
-
-from ..core.basic import BasicPlan
-from ..core.block_split import BlockSplitPlan
-from ..core.pair_range import PairRangePlan, range_block_segments
-from ..core.sorted_neighborhood import SortedNeighborhoodPlan, band_range_segment
-from ..core.two_source import (BlockSplit2Plan, PairRange2Plan,
-                               range_block_segments_2src)
-from ..kernels.pair_sim import NCOLS
+from .compiler import (  # noqa: F401
+    A_TILE, B_TILE, R0, R1, C0, C1, TRI, LB_R, LB_C, UB_R, UB_C, BAND, RED,
+    NCOLS,
+    TileCatalog,
+    cross_job,
+    enumerate_catalog_pairs,
+    lower,
+    match_catalog,
+    plan_to_job,
+    score_catalog,
+    verify_pairs,
+)
+from .compiler.execute import _resolve_impl  # noqa: F401  (service shim)
+from .compiler.ir import NO_LB as _NO_LB, NO_UB as _NO_UB  # noqa: F401
+from .compiler.lower import pad_catalog as pad_catalog_tiles  # noqa: F401
 
 __all__ = [
     "TileCatalog",
@@ -52,379 +44,22 @@ __all__ = [
     "enumerate_catalog_pairs",
 ]
 
-# Column indices (mirrors kernels.pair_sim's layout comment).
-(A_TILE, B_TILE, R0, R1, C0, C1, TRI, LB_R, LB_C, UB_R, UB_C, BAND,
- RED) = range(NCOLS)
 
-_NO_LB = -1           # rows are >= 0, so row > -1 always holds
-_NO_UB = 2 ** 30      # rows are < 2^30, so row < 2^30 always holds
-
-
-@dataclass(frozen=True)
-class TileCatalog:
-    """A compiled plan: T MXU tiles covering every planned pair once."""
-    tiles: np.ndarray      # (T, NCOLS) int32
-    block_m: int
-    block_n: int
-    n_rows_a: int          # LHS feature-matrix rows the tiles index into
-    n_rows_b: int          # RHS rows (== n_rows_a for single-source plans)
-    r: int                 # reduce tasks (tiles[:, RED] ∈ [0, r))
-    total_pairs: int       # planned pair count (exact, from the plan)
-
-    @property
-    def num_tiles(self) -> int:
-        return int(self.tiles.shape[0])
-
-
-def _task_tiles(a0: int, alen: int, b0: int, blen: int, tri: bool,
-                reducer: int, bm: int, bn: int,
-                lb: Tuple[int, int] = (_NO_LB, _NO_LB),
-                ub: Tuple[int, int] = (_NO_UB, _NO_UB),
-                band: int = 0) -> np.ndarray:
-    """Aligned tiles intersecting one task's [a0, a0+alen) × [b0, b0+blen)
-    window. Validity windows/cuts are global-row predicates, so every tile
-    of a task carries the same scalars; triangular tasks drop tiles
-    entirely on/below the diagonal (no row < col cell), banded tasks
-    additionally drop tiles entirely above the col − row < band diagonal —
-    the tile set hugs the band instead of filling the bounding rectangle."""
-    if alen <= 0 or blen <= 0:
-        return np.zeros((0, NCOLS), np.int32)
-    ii = np.arange(a0 // bm, -(-(a0 + alen) // bm), dtype=np.int64)
-    jj = np.arange(b0 // bn, -(-(b0 + blen) // bn), dtype=np.int64)
-    tii, tjj = np.meshgrid(ii, jj, indexing="ij")
-    tii, tjj = tii.ravel(), tjj.ravel()
-    if tri:
-        keep = np.maximum(tii * bm, a0) < np.minimum((tjj + 1) * bn, b0 + blen)
-        tii, tjj = tii[keep], tjj[keep]
-    if band > 0:
-        # Some cell with col − row < band: min over the tile∩window of
-        # (col − row) is clipped_col_start − (clipped_row_end − 1).
-        keep = (np.maximum(tjj * bn, b0)
-                < np.minimum((tii + 1) * bm, a0 + alen) + band - 1)
-        tii, tjj = tii[keep], tjj[keep]
-    t = np.empty((tii.size, NCOLS), np.int32)
-    t[:, A_TILE] = tii
-    t[:, B_TILE] = tjj
-    t[:, R0] = a0
-    t[:, R1] = a0 + alen
-    t[:, C0] = b0
-    t[:, C1] = b0 + blen
-    t[:, TRI] = int(tri)
-    t[:, LB_R], t[:, LB_C] = lb
-    t[:, UB_R], t[:, UB_C] = ub
-    t[:, BAND] = band
-    t[:, RED] = reducer
-    return t
-
-
-def _stack(parts, bm, bn, n_rows_a, n_rows_b, r, total) -> TileCatalog:
-    tiles = (np.concatenate(parts, axis=0) if parts
-             else np.zeros((0, NCOLS), np.int32))
-    return TileCatalog(tiles=tiles, block_m=bm, block_n=bn,
-                       n_rows_a=n_rows_a, n_rows_b=n_rows_b,
-                       r=r, total_pairs=total)
-
-
-# ---------------------------------------------------------------------------
-# Plan compilers
-# ---------------------------------------------------------------------------
-
-def catalog_for_basic(plan: BasicPlan, block_m: int = 128,
-                      block_n: int = 128) -> TileCatalog:
-    """One triangular task per block with >= 1 pair, on its reducer."""
-    sizes = plan.block_sizes
-    estart = np.concatenate([np.zeros(1, np.int64), np.cumsum(sizes)[:-1]])
-    parts = [
-        _task_tiles(int(estart[k]), int(sizes[k]),
-                    int(estart[k]), int(sizes[k]), True,
-                    int(plan.block_reducer[k]), block_m, block_n)
-        for k in np.flatnonzero(sizes >= 2)
-    ]
-    n = int(sizes.sum())
-    return _stack(parts, block_m, block_n, n, n, plan.r, plan.total_pairs)
-
-
-def catalog_for_block_split(plan: BlockSplitPlan, block_m: int = 128,
-                            block_n: int = 128) -> TileCatalog:
-    """The match-task table is already tile geometry — compile directly."""
-    parts = [
-        _task_tiles(int(plan.task_a_start[t]), int(plan.task_a_len[t]),
-                    int(plan.task_b_start[t]), int(plan.task_b_len[t]),
-                    bool(plan.task_triangular[t]),
-                    int(plan.task_reducer[t]), block_m, block_n)
-        for t in range(plan.task_block.shape[0])
-    ]
-    n = int(plan.block_sizes.sum())
-    return _stack(parts, block_m, block_n, n, n, plan.r, plan.total_pairs)
-
-
-def catalog_for_pair_range(plan: PairRangePlan, block_m: int = 128,
-                           block_n: int = 128) -> TileCatalog:
-    """Range k ∩ block = a corner-cut triangle segment (x_lo..x_hi columns,
-    prefix/suffix cuts at (x_lo, y_lo) / (x_hi, y_hi)) — expressed with the
-    catalog's lb/ub predicates, O(1) scalars per (range, block)."""
-    parts = []
-    for k in range(plan.r):
-        for blk, x_lo, y_lo, x_hi, y_hi in range_block_segments(plan, k):
-            e0 = int(plan.estart[blk])
-            n = int(plan.block_sizes[blk])
-            c0 = e0 + (y_lo if x_hi == x_lo else x_lo + 1)
-            c1 = e0 + (y_hi + 1 if x_hi == x_lo else n)
-            parts.append(_task_tiles(
-                e0 + x_lo, x_hi - x_lo + 1, c0, c1 - c0, True, k,
-                block_m, block_n,
-                lb=(e0 + x_lo, e0 + y_lo), ub=(e0 + x_hi, e0 + y_hi)))
-    n_rows = int(plan.block_sizes.sum())
-    return _stack(parts, block_m, block_n, n_rows, n_rows,
-                  plan.r, plan.total_pairs)
-
-
-def catalog_for_sorted_neighborhood(plan: SortedNeighborhoodPlan,
-                                    block_m: int = 128,
-                                    block_n: int = 128) -> TileCatalog:
-    """Compile the window-w band over the sort order (features must be in
-    sorted-key order). Range k ∩ band = rows i_lo..i_hi with a prefix cut
-    at (i_lo, j_lo) and a suffix cut at (i_hi, j_hi) — the PairRange
-    corner-cut machinery — plus the band predicate col − row < w, the
-    first non-block-aligned tile geometry in the catalog vocabulary.
-    Tiles are pruned to the ones actually intersecting the band."""
-    n, we = plan.n, plan.w_eff
-    parts = []
-    for k in range(plan.r):
-        seg = band_range_segment(plan, k)
-        if seg is None:
-            continue
-        i_lo, j_lo, i_hi, j_hi = seg
-        c0 = i_lo + 1
-        c1 = min(i_hi + we, n)
-        parts.append(_task_tiles(
-            i_lo, i_hi - i_lo + 1, c0, c1 - c0, True, k, block_m, block_n,
-            lb=(i_lo, j_lo), ub=(i_hi, j_hi), band=we))
-    return _stack(parts, block_m, block_n, n, n, plan.r, plan.total_pairs)
+def build_catalog(plan, block_m: int = 128, block_n: int = 128) -> TileCatalog:
+    """Compile any plan (Basic / BlockSplit / PairRange / SN / 2src) to a
+    tile catalog — ``lower(plan_to_job(plan))``."""
+    return lower(plan_to_job(plan), block_m, block_n)
 
 
 def catalog_for_cross(n_a: int, n_b: int, r: int = 1, block_m: int = 128,
                       block_n: int = 128) -> TileCatalog:
-    """Full cartesian A × B (the match_⊥(R, R_∅) job): one rectangular
-    task over two *different* feature matrices, tiles round-robined over
-    r reducers."""
-    tiles = _task_tiles(0, n_a, 0, n_b, False, 0, block_m, block_n)
-    if tiles.shape[0]:
-        tiles[:, RED] = np.arange(tiles.shape[0], dtype=np.int32) % max(r, 1)
-    return TileCatalog(tiles=tiles, block_m=block_m, block_n=block_n,
-                       n_rows_a=n_a, n_rows_b=n_b, r=max(r, 1),
-                       total_pairs=n_a * n_b)
+    """Full cartesian A × B (the match_⊥(R, R_∅) job)."""
+    return lower(cross_job(n_a, n_b, r), block_m, block_n)
 
 
-def catalog_for_two_source(plan, block_m: int = 128,
-                           block_n: int = 128) -> TileCatalog:
-    """Compile a two-source R × S plan (paper Appendix I) to cross tiles.
-
-    The a-side indexes the R blocked layout, the b-side the S blocked
-    layout — two *different* feature matrices, so every task is
-    rectangular (tri=False). BlockSplit2's match-task table is already
-    tile geometry; PairRange2's range ∩ block is a contiguous run of the
-    row-major rectangular enumeration — rows x_lo..x_hi with a prefix cut
-    at (x_lo, y_lo) and a suffix cut at (x_hi, y_hi), the same lb/ub
-    corner-cut predicates the single-source compiler uses (they are plain
-    row/col comparisons, agnostic to triangular vs rectangular cells).
-    This is the query-vs-corpus hot path of ``er/service.ERService``.
-    """
-    if isinstance(plan, BlockSplit2Plan):
-        parts = [
-            _task_tiles(int(plan.task_a_start[t]), int(plan.task_a_len[t]),
-                        int(plan.task_b_start[t]), int(plan.task_b_len[t]),
-                        False, int(plan.task_reducer[t]), block_m, block_n)
-            for t in range(plan.task_block.shape[0])
-        ]
-        return _stack(parts, block_m, block_n, plan.n_rows_r, plan.n_rows_s,
-                      plan.r, plan.total_pairs)
-    if isinstance(plan, PairRange2Plan):
-        parts = []
-        for k in range(plan.r):
-            for blk, x_lo, y_lo, x_hi, y_hi in range_block_segments_2src(plan, k):
-                e0r = int(plan.er_start[blk])
-                e0s = int(plan.es_start[blk])
-                ns = int(plan.sizes_s[blk])
-                c0 = e0s + (y_lo if x_hi == x_lo else 0)
-                c1 = e0s + (y_hi + 1 if x_hi == x_lo else ns)
-                parts.append(_task_tiles(
-                    e0r + x_lo, x_hi - x_lo + 1, c0, c1 - c0, False, k,
-                    block_m, block_n,
-                    lb=(e0r + x_lo, e0s + y_lo), ub=(e0r + x_hi, e0s + y_hi)))
-        return _stack(parts, block_m, block_n, plan.n_rows_r, plan.n_rows_s,
-                      plan.r, plan.total_pairs)
-    raise TypeError(f"no two-source catalog compiler for {type(plan).__name__}")
-
-
-def build_catalog(plan, block_m: int = 128, block_n: int = 128) -> TileCatalog:
-    """Dispatch on plan type (Basic / BlockSplit / PairRange / SN / 2src)."""
-    if isinstance(plan, BasicPlan):
-        return catalog_for_basic(plan, block_m, block_n)
-    if isinstance(plan, BlockSplitPlan):
-        return catalog_for_block_split(plan, block_m, block_n)
-    if isinstance(plan, PairRangePlan):
-        return catalog_for_pair_range(plan, block_m, block_n)
-    if isinstance(plan, SortedNeighborhoodPlan):
-        return catalog_for_sorted_neighborhood(plan, block_m, block_n)
-    if isinstance(plan, (BlockSplit2Plan, PairRange2Plan)):
-        return catalog_for_two_source(plan, block_m, block_n)
-    raise TypeError(f"no catalog compiler for {type(plan).__name__}")
-
-
-def pad_catalog_tiles(catalog: TileCatalog, multiple: int) -> TileCatalog:
-    """Pad the tile table to a multiple of ``multiple`` rows with all-zero
-    entries (empty validity window r0 == r1 == 0 → no survivors), so a
-    chunked scorer sees only one chunk shape — the shape-bucketing the
-    serving path relies on for zero steady-state recompiles."""
-    t = catalog.num_tiles
-    padded = max(multiple, -(-t // multiple) * multiple)
-    if padded == t:
-        return catalog
-    tiles = np.concatenate(
-        [catalog.tiles, np.zeros((padded - t, NCOLS), np.int32)], axis=0)
-    return TileCatalog(tiles=tiles, block_m=catalog.block_m,
-                       block_n=catalog.block_n, n_rows_a=catalog.n_rows_a,
-                       n_rows_b=catalog.n_rows_b, r=catalog.r,
-                       total_pairs=catalog.total_pairs)
-
-
-# ---------------------------------------------------------------------------
-# Execution
-# ---------------------------------------------------------------------------
-
-def _resolve_impl(impl: str) -> str:
-    if impl == "auto":
-        # Interpret-mode Pallas is a Python emulator — on a non-TPU
-        # backend the batched-matmul XLA path IS the production path.
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return impl
-
-
-def _pad_pow2(t: int, cap: int) -> int:
-    p = 1
-    while p < t:
-        p *= 2
-    return min(p, cap)
-
-
-def score_catalog(feats_a, catalog: TileCatalog, feats_b=None, *,
-                  threshold: float, impl: str = "auto",
-                  chunk_tiles: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
-    """Stage 1 for a whole catalog: survivor candidate pairs.
-
-    Runs the catalog through the kernel in fixed-size chunks (padded to
-    powers of two so jit caches a handful of shapes), compacts each
-    chunk's (chunk, bm, bn) survivor mask into global (row_a, row_b)
-    indices. Returns two int64 arrays.
-    """
-    import jax.numpy as jnp
-
-    from ..kernels import ops
-
-    impl = _resolve_impl(impl)
-    if feats_b is None:
-        feats_b = feats_a
-    fa = jnp.asarray(feats_a)
-    fb = jnp.asarray(feats_b)
-    tiles = catalog.tiles
-    bm, bn = catalog.block_m, catalog.block_n
-    t_total = tiles.shape[0]
-    out_a, out_b = [], []
-    for lo in range(0, t_total, chunk_tiles):
-        chunk = tiles[lo:lo + chunk_tiles]
-        padded = _pad_pow2(chunk.shape[0], chunk_tiles)
-        if padded != chunk.shape[0]:
-            # Empty entries: zero windows (r0 == r1) mask everything out.
-            pad = np.zeros((padded - chunk.shape[0], NCOLS), np.int32)
-            chunk = np.concatenate([chunk, pad], axis=0)
-        mask = np.asarray(ops.pair_scores_catalog(
-            fa, fb, jnp.asarray(chunk), threshold=threshold,
-            block_m=bm, block_n=bn, impl=impl))
-        ti, ii, jj = np.nonzero(mask)
-        out_a.append(chunk[ti, A_TILE].astype(np.int64) * bm + ii)
-        out_b.append(chunk[ti, B_TILE].astype(np.int64) * bn + jj)
-    if not out_a:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    return np.concatenate(out_a), np.concatenate(out_b)
-
-
-_VERIFY_CHUNK = 8_192
-
-
-def verify_pairs(codes_a, lens_a, codes_b, lens_b, rows_a, rows_b,
-                 threshold: float,
-                 chunk: int = _VERIFY_CHUNK) -> Tuple[np.ndarray, np.ndarray]:
-    """Stage 2: exact normalized edit similarity >= threshold on candidate
-    row pairs, in fixed-size padded chunks (one jit compilation)."""
-    from .similarity import edit_similarity
-
-    hit_a, hit_b = [], []
-    for lo in range(0, rows_a.shape[0], chunk):
-        a = rows_a[lo:lo + chunk]
-        b = rows_b[lo:lo + chunk]
-        pad = chunk - a.shape[0]
-        if pad:
-            a = np.concatenate([a, np.zeros(pad, a.dtype)])
-            b = np.concatenate([b, np.zeros(pad, b.dtype)])
-        sim = np.array(edit_similarity(
-            codes_a[a], lens_a[a], codes_b[b], lens_b[b]))
-        if pad:
-            sim[chunk - pad:] = 0.0
-        sel = np.flatnonzero(sim >= threshold)
-        hit_a.append(a[sel])
-        hit_b.append(b[sel])
-    if not hit_a:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    return np.concatenate(hit_a), np.concatenate(hit_b)
-
-
-def match_catalog(catalog: TileCatalog, feats_a, codes_a, lens_a, *,
-                  feats_b=None, codes_b=None, lens_b=None,
-                  threshold: float = 0.8, filter_margin: float = 0.25,
-                  impl: str = "auto",
-                  chunk_tiles: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
-    """Fused filter-and-verify: kernel stage 1 over the tile catalog,
-    exact stage 2 on compacted survivors. Returns matched (rows_a, rows_b)
-    — indices into the a-side (and b-side, if distinct) arrays."""
-    cand_a, cand_b = score_catalog(
-        feats_a, catalog, feats_b,
-        threshold=threshold - filter_margin, impl=impl,
-        chunk_tiles=chunk_tiles)
-    if codes_b is None:
-        codes_b, lens_b = codes_a, lens_a
-    return verify_pairs(codes_a, lens_a, codes_b, lens_b,
-                        cand_a, cand_b, threshold)
-
-
-# ---------------------------------------------------------------------------
-# Test oracle
-# ---------------------------------------------------------------------------
-
-def enumerate_catalog_pairs(catalog: TileCatalog) -> Tuple[np.ndarray, np.ndarray]:
-    """Materialize every pair a catalog covers (numpy, O(P) — tests only).
-
-    Applies the exact kernel predicate per tile; the parity tests assert
-    this equals the plan's own pair enumeration, i.e. the catalog covers
-    each planned pair exactly once.
-    """
-    bm, bn = catalog.block_m, catalog.block_n
-    gi = np.arange(bm)[:, None]
-    gj = np.arange(bn)[None, :]
-    out_a, out_b = [], []
-    for e in catalog.tiles:
-        rows = e[A_TILE].astype(np.int64) * bm + gi
-        cols = e[B_TILE].astype(np.int64) * bn + gj
-        keep = (rows >= e[R0]) & (rows < e[R1]) & (cols >= e[C0]) & (cols < e[C1])
-        if e[TRI]:
-            keep &= rows < cols
-        keep &= (rows > e[LB_R]) | (cols >= e[LB_C])
-        keep &= (rows < e[UB_R]) | (cols <= e[UB_C])
-        if e[BAND]:
-            keep &= cols - rows < e[BAND]
-        ii, jj = np.nonzero(keep)
-        out_a.append(rows[ii, 0])
-        out_b.append(cols[0, jj])
-    if not out_a:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    return np.concatenate(out_a), np.concatenate(out_b)
+# Per-strategy aliases: every one is the same lowering now.
+catalog_for_basic = build_catalog
+catalog_for_block_split = build_catalog
+catalog_for_pair_range = build_catalog
+catalog_for_sorted_neighborhood = build_catalog
+catalog_for_two_source = build_catalog

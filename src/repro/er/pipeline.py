@@ -1,22 +1,27 @@
 """End-to-end ER pipeline — the paper's Fig. 2 workflow on one host.
 
-Job 1: blocking keys + block distribution matrix (BDM).
-Job 2: strategy plan (Basic / BlockSplit / PairRange) + reduce-phase
-matching (two-stage cosine-filter → edit-distance verify).
+Job 1: blocking keys + block distribution matrix (BDM) — or, for
+Sorted Neighborhood, the sort pass (no BDM: the band's pair count is a
+pure function of (n, w), so there is no block skew to measure).
 
-The reduce phase executes through the *tile-catalog executor*
-(er/executor.py): the plan compiles to a flat catalog of MXU-aligned
-tiles and the whole match phase runs as fused kernel calls — stage-1
-cosine filter on the Pallas kernel (XLA batched-matmul twin on CPU),
-stage-2 exact edit-distance verify on the compacted survivors. No
-per-pair index arrays are materialized host-side; catalog memory is
-O(#tiles). ``ERConfig.executor = "reference"`` keeps the original
-per-reducer numpy loop (materialized pair lists + chunked ``np.einsum``)
-as the parity oracle and the before/after benchmark baseline.
+Job 2: strategy plan + reduce-phase matching (two-stage cosine-filter →
+edit-distance verify), through ONE path for every strategy — the
+unified match-job compiler (``er/compiler``):
+
+    plan → plan_to_job → lower → schedule_tiles → execute → verify
+
+The plan lowers to the MatchJob IR, tiles into an MXU catalog, the
+cost-LPT scheduler places tiles by their exact live-pair counts
+(``ERConfig.schedule_policy``; the reported imbalance lands on
+``ERResult.schedule``), and the fused kernel scores the catalog.
+``ERConfig.executor = "reference"`` keeps the original per-reducer
+numpy loop (materialized pair lists + chunked ``np.einsum``) as the
+parity oracle and the before/after benchmark baseline.
 
 Entities without blocking keys (block id −1) follow the paper's
 decomposition: match_B(R,R) over the keyed subset ∪ match_⊥(R, R_∅) via a
-two-source cartesian job (§III, Appendix I preamble).
+two-source cartesian job (§III, Appendix I preamble). SN has no match_⊥
+job — every entity has a sort key.
 """
 from __future__ import annotations
 
@@ -24,8 +29,6 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
@@ -37,8 +40,11 @@ from ..core import (
     plan_pair_range,
     pairs_of_range,
 )
-from ..core.pair_range import map_output_size as pair_range_map_output_size
+from ..core.basic import BasicPlan
+from ..core.block_split import BlockSplitPlan
+from ..core.pair_range import PairRangePlan, map_output_size as pair_range_map_output_size
 from ..core.sorted_neighborhood import (
+    SortedNeighborhoodPlan,
     map_output_size as sn_map_output_size,
     pairs_of_band_range,
     plan_sorted_neighborhood,
@@ -46,8 +52,8 @@ from ..core.sorted_neighborhood import (
 from ..core.two_source import TwoSourceBDM, plan_pair_range_2src, pairs_of_range_2src
 from .blocking import prefix_block_ids, sn_sort_order
 from .encode import encode_titles, ngram_features
-from .executor import (build_catalog, catalog_for_cross,
-                       catalog_for_sorted_neighborhood, match_catalog)
+from .compiler import (apply_schedule, cross_job, enumerate_task_pairs,
+                       lower, match_catalog, plan_to_job, schedule_tiles)
 
 __all__ = ["ERConfig", "ERResult", "run_er", "featurize", "cross_restrict"]
 
@@ -90,6 +96,7 @@ class ERConfig:
     block_m: int = 128                 # catalog tile rows (MXU-aligned)
     block_n: int = 128                 # catalog tile cols
     kernel_impl: str = "auto"          # auto | pallas | interpret | xla
+    schedule_policy: str = "cost_lpt"  # cost_lpt | round_robin
 
 
 @dataclass
@@ -102,6 +109,8 @@ class ERResult:
     reducer_seconds: np.ndarray        # (r,) measured matching time
     extra: Dict = field(default_factory=dict)
     config: Optional[ERConfig] = None  # the (fresh) config this run used
+    schedule: Optional[Dict] = None    # compiler Schedule.stats() (catalog
+                                       # executor): reducer/device imbalance
 
     @property
     def makespan_seconds(self) -> float:
@@ -116,8 +125,8 @@ def _match_pairs_chunked(feats, codes, lens, rows_a, rows_b,
     """REFERENCE executor (``ERConfig.executor = "reference"``): filter-
     and-verify over materialized (rows_a, rows_b). Stage 1 is a host
     ``np.einsum`` paired dot; stage 2 the exact verifier. Kept as the
-    parity oracle for the tile-catalog executor and as the before-side of
-    the kernel benchmark — the hot path no longer runs through here."""
+    parity oracle for the compiler path and as the before-side of the
+    kernel benchmark — the hot path no longer runs through here."""
     from .similarity import edit_similarity
 
     n = rows_a.shape[0]
@@ -151,82 +160,43 @@ def _match_pairs_chunked(feats, codes, lens, rows_a, rows_b,
     return np.concatenate(hit_a), np.concatenate(hit_b)
 
 
-def _tile_pairs(a0: int, alen: int, b0: int, blen: int, tri: bool):
-    """Row-index pairs of one match task — reference executor only (the
-    catalog path never materializes per-pair indices)."""
-    if tri:
-        x, y = np.triu_indices(alen, k=1)
-        return a0 + x, a0 + y
-    x, y = np.meshgrid(np.arange(alen), np.arange(blen), indexing="ij")
-    return a0 + x.ravel(), b0 + y.ravel()
+def _reference_reducer_rows(plan, r: int) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Materialized per-reducer (rows_a, rows_b) for the reference
+    executor — the O(P) path the compiler's catalog replaces. Pair
+    enumeration is the compiler's (``enumerate_task_pairs``), so the
+    triangular/rect logic exists exactly once in the codebase."""
+    rows: List[Tuple[np.ndarray, np.ndarray]] = [
+        (np.zeros(0, np.int64), np.zeros(0, np.int64)) for _ in range(r)]
 
+    def add(k, ra, rb):
+        pa, pb = rows[k]
+        rows[k] = (np.concatenate([pa, ra]), np.concatenate([pb, rb]))
 
-def _run_er_sorted_neighborhood(titles: Sequence[str], cfg: ERConfig) -> ERResult:
-    """Sorted Neighborhood: sort by key, range-partition the window-w band
-    over the sort order into r balanced reduce tasks, match the band.
-
-    Job 1 is the sort (no BDM — the band's pair count is a pure function
-    of (n, w), so there is no block skew to measure); Job 2 runs through
-    the tile-catalog executor with the band-diagonal geometry, or the
-    reference per-reducer numpy loop. Every entity has a sort key, so SN
-    has no match_⊥ decomposition.
-    """
-    n = len(titles)
-    codes, lens, feats = featurize(titles, cfg)
-
-    t0 = time.perf_counter()
-    order = sn_sort_order(titles)
-    plan = plan_sorted_neighborhood(n, cfg.window, cfg.r)
-    sort_seconds = time.perf_counter() - t0
-    map_out = sn_map_output_size(plan)
-
-    s_feats = feats[order]
-    s_codes = codes[order]
-    s_lens = lens[order]
-
-    matches: Set[Tuple[int, int]] = set()
-    reducer_seconds = np.zeros(cfg.r)
-    total = plan.total_pairs
-    extra: Dict = {"window": cfg.window, "w_eff": plan.w_eff}
-    if cfg.executor == "catalog":
-        catalog = catalog_for_sorted_neighborhood(plan, cfg.block_m, cfg.block_n)
-        extra["catalog_tiles"] = catalog.num_tiles
-        t0 = time.perf_counter()
-        ha, hb = match_catalog(
-            catalog, s_feats, s_codes, s_lens,
-            threshold=cfg.threshold, filter_margin=cfg.filter_margin,
-            impl=cfg.kernel_impl)
-        elapsed = time.perf_counter() - t0
-        for a, b in zip(order[ha], order[hb]):
-            matches.add((min(int(a), int(b)), max(int(a), int(b))))
-        if total:
-            reducer_seconds = (elapsed * np.asarray(plan.reducer_pairs,
-                                                    np.float64) / total)
-    elif cfg.executor == "reference":
-        for k in range(cfg.r):
+    if isinstance(plan, PairRangePlan):
+        for k in range(r):
+            _, _, _, ra, rb = pairs_of_range(plan, k)
+            rows[k] = (ra, rb)
+    elif isinstance(plan, SortedNeighborhoodPlan):
+        for k in range(r):
             ra, rb = pairs_of_band_range(plan, k)
-            if ra.size == 0:
-                continue
-            t0 = time.perf_counter()
-            ha, hb = _match_pairs_chunked(
-                s_feats, s_codes, s_lens, ra, rb,
-                cfg.threshold, cfg.filter_margin)
-            reducer_seconds[k] = time.perf_counter() - t0
-            for a, b in zip(order[ha], order[hb]):
-                matches.add((min(int(a), int(b)), max(int(a), int(b))))
+            rows[k] = (ra, rb)
+    elif isinstance(plan, BlockSplitPlan):
+        for t in range(plan.task_block.shape[0]):
+            ra, rb = enumerate_task_pairs(
+                int(plan.task_a_start[t]), int(plan.task_a_len[t]),
+                int(plan.task_b_start[t]), int(plan.task_b_len[t]),
+                bool(plan.task_triangular[t]))
+            add(int(plan.task_reducer[t]), ra, rb)
+    elif isinstance(plan, BasicPlan):
+        sizes = plan.block_sizes
+        estart = np.concatenate([np.zeros(1, np.int64), np.cumsum(sizes)[:-1]])
+        for k_blk in np.flatnonzero(sizes >= 2):
+            ra, rb = enumerate_task_pairs(
+                int(estart[k_blk]), int(sizes[k_blk]), 0, 0, True)
+            add(int(plan.block_reducer[k_blk]), ra, rb)
     else:
-        raise ValueError(f"unknown executor {cfg.executor!r}")
-
-    return ERResult(
-        matches=matches,
-        total_pairs=int(total),
-        reducer_pairs=np.asarray(plan.reducer_pairs, np.int64),
-        map_output_size=int(map_out),
-        bdm_seconds=sort_seconds,
-        reducer_seconds=reducer_seconds,
-        extra=extra,
-        config=cfg,
-    )
+        raise TypeError(f"no reference enumeration for {type(plan).__name__}")
+    return rows
 
 
 def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
@@ -241,106 +211,101 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     """
     n = len(titles)
     cfg = config if config is not None else ERConfig()
-    if cfg.strategy == "sorted_neighborhood":
-        return _run_er_sorted_neighborhood(titles, cfg)
-    if block_ids is None:
-        block_ids, _ = prefix_block_ids(titles, k=cfg.prefix_len)
-    block_ids = np.asarray(block_ids, np.int64)
-
-    # Input partitions: m contiguous row ranges (HDFS-split analog).
-    part_ids = np.minimum(
-        np.arange(n, dtype=np.int64) * cfg.m // max(n, 1), cfg.m - 1)
-
-    keyed = block_ids >= 0
-    keyed_idx = np.flatnonzero(keyed)
+    if cfg.executor not in ("catalog", "reference"):
+        raise ValueError(f"unknown executor {cfg.executor!r}")
 
     # ---- featurize once (shared by both jobs) ----
     codes, lens, feats = featurize(titles, cfg)
 
-    # ---- Job 1: BDM ----
-    t0 = time.perf_counter()
-    kb = block_ids[keyed_idx]
-    kp = part_ids[keyed_idx]
-    num_blocks = int(kb.max()) + 1 if kb.size else 0
-    bdm = compute_bdm(kb, kp, num_blocks, cfg.m)
-    eidx = entity_indices(kb, kp, bdm)
-    bdm_seconds = time.perf_counter() - t0
+    extra: Dict = {}
+    null_idx: Optional[np.ndarray] = None
 
-    sizes = bdm.sum(axis=1)
-    perm, estart = blocked_layout(kb, eidx, sizes)
-    # perm[blocked_row] = row within keyed_idx → map to global entity ids.
-    to_global = keyed_idx[perm]
+    # ---- Job 1 + plan: the ONLY strategy-aware stage ----
+    if cfg.strategy == "sorted_neighborhood":
+        # Job 1 is the sort (no BDM — the band's pair count is a pure
+        # function of (n, w), so there is no block skew to measure), and
+        # every entity has a sort key, so SN has no match_⊥ job.
+        t0 = time.perf_counter()
+        to_global = sn_sort_order(titles)
+        plan = plan_sorted_neighborhood(n, cfg.window, cfg.r)
+        bdm_seconds = time.perf_counter() - t0
+        map_out = sn_map_output_size(plan)
+        extra.update(window=cfg.window, w_eff=plan.w_eff)
+    elif cfg.strategy in ("basic", "block_split", "pair_range"):
+        if block_ids is None:
+            block_ids, _ = prefix_block_ids(titles, k=cfg.prefix_len)
+        block_ids = np.asarray(block_ids, np.int64)
+
+        # Input partitions: m contiguous row ranges (HDFS-split analog).
+        part_ids = np.minimum(
+            np.arange(n, dtype=np.int64) * cfg.m // max(n, 1), cfg.m - 1)
+
+        keyed = block_ids >= 0
+        keyed_idx = np.flatnonzero(keyed)
+        if (~keyed).any():
+            null_idx = np.flatnonzero(~keyed)
+
+        # ---- Job 1: BDM ----
+        t0 = time.perf_counter()
+        kb = block_ids[keyed_idx]
+        kp = part_ids[keyed_idx]
+        num_blocks = int(kb.max()) + 1 if kb.size else 0
+        bdm = compute_bdm(kb, kp, num_blocks, cfg.m)
+        eidx = entity_indices(kb, kp, bdm)
+        bdm_seconds = time.perf_counter() - t0
+
+        sizes = bdm.sum(axis=1)
+        perm, _ = blocked_layout(kb, eidx, sizes)
+        # perm[blocked_row] = row within keyed_idx → global entity ids.
+        to_global = keyed_idx[perm]
+
+        if cfg.strategy == "pair_range":
+            plan = plan_pair_range(bdm, cfg.r)
+            # Closed-form O(r + b) math (core/pair_range.map_output_size)
+            # — exact at any scale, so it is ALWAYS computed.
+            map_out = pair_range_map_output_size(plan)
+        elif cfg.strategy == "block_split":
+            plan = plan_block_split(bdm, cfg.r)
+            map_out = plan.map_output_size()
+        else:
+            plan = plan_basic(bdm, cfg.r)
+            map_out = plan.map_output_size()
+    else:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+
     g_feats = feats[to_global]
     g_codes = codes[to_global]
     g_lens = lens[to_global]
+    reducer_pairs = np.asarray(plan.reducer_pairs, np.int64)
+    total = int(plan.total_pairs)
 
-    # ---- Job 2: plan ----
-    if cfg.strategy == "pair_range":
-        plan = plan_pair_range(bdm, cfg.r)
-        # Closed-form O(r + b) math (core/pair_range.map_output_size) —
-        # exact at any scale, so it is ALWAYS computed (no -1 sentinel).
-        map_out = pair_range_map_output_size(plan)
-    elif cfg.strategy == "block_split":
-        plan = plan_block_split(bdm, cfg.r)
-        map_out = plan.map_output_size()
-    elif cfg.strategy == "basic":
-        plan = plan_basic(bdm, cfg.r)
-        map_out = plan.map_output_size()
-    else:
-        raise ValueError(f"unknown strategy {cfg.strategy!r}")
-    reducer_pairs = plan.reducer_pairs
-    total = plan.total_pairs
-
-    # ---- Job 2: reduce-phase matching ----
+    # ---- Job 2: reduce-phase matching (one path for every strategy) ----
     matches: Set[Tuple[int, int]] = set()
     reducer_seconds = np.zeros(cfg.r)
+    sched_report: Optional[Dict] = None
     if cfg.executor == "catalog":
-        # Fused path: compile the plan to MXU tiles, score them all on the
-        # kernel, verify compacted survivors. One launch per mask chunk —
-        # wall time is attributed to reducers by planned load (the paper's
-        # balance metric), since no per-reducer loop exists anymore.
-        catalog = build_catalog(plan, cfg.block_m, cfg.block_n)
+        # The compiler pipeline: lower the plan to MXU tiles, place tiles
+        # by exact live-pair cost (LPT), score them all on the kernel,
+        # verify compacted survivors. Wall time is attributed to reducers
+        # by planned load (the paper's balance metric), since no
+        # per-reducer loop exists anymore.
+        catalog = lower(plan_to_job(plan), cfg.block_m, cfg.block_n)
+        extra["catalog_tiles"] = catalog.num_tiles
+        sched = schedule_tiles(catalog, policy=cfg.schedule_policy)
+        sched_report = sched.stats()
         t0 = time.perf_counter()
         ha, hb = match_catalog(
-            catalog, g_feats, g_codes, g_lens,
+            apply_schedule(catalog, sched), g_feats, g_codes, g_lens,
             threshold=cfg.threshold, filter_margin=cfg.filter_margin,
             impl=cfg.kernel_impl)
         elapsed = time.perf_counter() - t0
         for a, b in zip(to_global[ha], to_global[hb]):
             matches.add((min(int(a), int(b)), max(int(a), int(b))))
         if total:
-            reducer_seconds = (elapsed * np.asarray(reducer_pairs, np.float64)
+            reducer_seconds = (elapsed * reducer_pairs.astype(np.float64)
                                / total)
-    elif cfg.executor == "reference":
-        reducer_rows: List[Tuple[np.ndarray, np.ndarray]] = [
-            (np.zeros(0, np.int64), np.zeros(0, np.int64))
-            for _ in range(cfg.r)]
-        if cfg.strategy == "pair_range":
-            for k in range(cfg.r):
-                _, _, _, ra, rb = pairs_of_range(plan, k)
-                reducer_rows[k] = (ra, rb)
-        elif cfg.strategy == "block_split":
-            for t in range(plan.task_block.shape[0]):
-                ra, rb = _tile_pairs(
-                    int(plan.task_a_start[t]), int(plan.task_a_len[t]),
-                    int(plan.task_b_start[t]), int(plan.task_b_len[t]),
-                    bool(plan.task_triangular[t]))
-                k = int(plan.task_reducer[t])
-                pa, pb = reducer_rows[k]
-                reducer_rows[k] = (np.concatenate([pa, ra]),
-                                   np.concatenate([pb, rb]))
-        else:
-            for k_blk in range(sizes.shape[0]):
-                if sizes[k_blk] < 2:
-                    continue
-                ra, rb = _tile_pairs(
-                    int(estart[k_blk]), int(sizes[k_blk]), 0, 0, True)
-                k = int(plan.block_reducer[k_blk])
-                pa, pb = reducer_rows[k]
-                reducer_rows[k] = (np.concatenate([pa, ra]),
-                                   np.concatenate([pb, rb]))
-        for k in range(cfg.r):
-            ra, rb = reducer_rows[k]
+    else:
+        for k, (ra, rb) in enumerate(_reference_reducer_rows(plan, cfg.r)):
             if ra.size == 0:
                 continue
             t0 = time.perf_counter()
@@ -350,22 +315,17 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
             reducer_seconds[k] = time.perf_counter() - t0
             for a, b in zip(to_global[ha], to_global[hb]):
                 matches.add((min(int(a), int(b)), max(int(a), int(b))))
-    else:
-        raise ValueError(f"unknown executor {cfg.executor!r}")
 
-    extra: Dict = {}
     # ---- match_⊥(R, R_∅): entities without blocking key vs everyone ----
-    if cfg.match_missing_keys and (~keyed).any():
-        null_idx = np.flatnonzero(~keyed)
+    if cfg.match_missing_keys and null_idx is not None and null_idx.size:
         bdm2 = TwoSourceBDM(
             bdm_r=np.full((1, 1), n, np.int64),
             bdm_s=np.full((1, 1), null_idx.size, np.int64))
         plan2 = plan_pair_range_2src(bdm2, cfg.r)
         extra["null_key_pairs"] = plan2.total_pairs
         if cfg.executor == "catalog":
-            cross = catalog_for_cross(n, null_idx.size, r=cfg.r,
-                                      block_m=cfg.block_m,
-                                      block_n=cfg.block_n)
+            cross = lower(cross_job(n, int(null_idx.size), cfg.r),
+                          cfg.block_m, cfg.block_n)
             ha, hb = match_catalog(
                 cross, feats, codes, lens,
                 feats_b=feats[null_idx], codes_b=codes[null_idx],
@@ -393,10 +353,11 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     return ERResult(
         matches=matches,
         total_pairs=int(total),
-        reducer_pairs=np.asarray(reducer_pairs, np.int64),
+        reducer_pairs=reducer_pairs,
         map_output_size=int(map_out),
         bdm_seconds=bdm_seconds,
         reducer_seconds=reducer_seconds,
         extra=extra,
         config=cfg,
+        schedule=sched_report,
     )

@@ -15,19 +15,21 @@ in the blocked layout on device, BDM host-side) and serves
      `plan_block_split_2src`): each batch is a balanced query-vs-corpus
      R × S job over the shared block space — Kolb et al.'s Appendix-I
      formulation, finally wired end to end.
-  3. **Cross-tile catalog** (`er/executor.catalog_for_two_source`): the
-     plan compiles to rectangular MXU tiles scored by the same fused
-     kernel as the batch pipeline; exact stage-2 verify on survivors.
+  3. **Unified compiler** (`er/compiler`): the plan lowers through the
+     same `plan_to_job → lower → schedule_tiles → execute` pipeline as
+     the batch run_er — rectangular MXU tiles, cost-LPT tile placement,
+     the same fused kernel; exact stage-2 verify on survivors.
   4. **Shape buckets**: query batches pad to a small set of bucket sizes
      and catalogs pad to a fixed tile-chunk multiple, so steady-state
      traffic reuses a handful of compiled shapes — after :meth:`warmup`,
      serving triggers ZERO new XLA compilations (`compile_counter`
      asserts this in CI).
   5. **Sharded index** (``mesh=``): each device owns a corpus shard,
-     query batches broadcast, tile shards route reducer → device
-     round-robin (`er/distributed.make_catalog_2src_scorer`) — the
-     scorer is jitted once at construction, because a per-batch closure
-     would retrace every call.
+     query batches broadcast, tile shards route tiles → reducers →
+     devices through the compiler's cost-LPT schedule
+     (`compiler.schedule_tiles`) — the cross-mode scorer
+     (`compiler.make_scorer`) is jitted once at construction, because a
+     per-batch closure would retrace every call.
 
 Entities without blocking keys follow the paper's decomposition,
 restricted to cross pairs: null-key queries × whole corpus, plus
@@ -52,9 +54,9 @@ from ..core import blocked_layout, compute_bdm, entity_indices, update_bdm
 from ..core.two_source import (TwoSourceBDM, plan_block_split_2src,
                                plan_pair_range_2src)
 from .blocking import prefix_key
-from .executor import (catalog_for_cross, catalog_for_two_source,
-                       pad_catalog_tiles, score_catalog, verify_pairs,
-                       _resolve_impl)
+from .compiler import (cross_job, execute, lower, make_scorer, pad_catalog,
+                       plan_to_job, schedule_tiles, verify_pairs)
+from .compiler.execute import _resolve_impl
 from .pipeline import featurize
 
 __all__ = ["ServiceConfig", "ERService", "compile_counter"]
@@ -114,6 +116,7 @@ class ServiceConfig:
     kernel_impl: str = "auto"             # auto | pallas | interpret | xla
     query_buckets: Tuple[int, ...] = (8, 32, 128, 512)  # batch pad sizes
     tile_chunk: int = 256                 # fixed catalog chunk (tiles/launch)
+    schedule_policy: str = "cost_lpt"     # cost_lpt | round_robin
 
 
 class ERService:
@@ -180,10 +183,13 @@ class ERService:
 
         self._dist_scorer = None
         if mesh is not None:
-            from .distributed import make_catalog_2src_scorer
-            self._dist_scorer = make_catalog_2src_scorer(
-                mesh, axis, threshold=self._stage1, block_m=cfg.block_m,
-                block_n=cfg.block_n, impl=_resolve_impl(cfg.kernel_impl))
+            # ONE jitted cross-mode scorer for the service's lifetime —
+            # jit caches by function identity, so a per-batch closure
+            # would retrace every call (the recompile-guard failure mode).
+            self._dist_scorer = make_scorer(
+                mesh, axis, mode="cross", threshold=self._stage1,
+                block_m=cfg.block_m, block_n=cfg.block_n,
+                impl=_resolve_impl(cfg.kernel_impl))
 
     # ------------------------------------------------------------------
     # Blocking-key vocabulary (persistent across corpus and all batches)
@@ -248,20 +254,22 @@ class ERService:
     def _score(self, feats_a, catalog, q_buf: np.ndarray):
         """Stage 1 with fixed shapes: the catalog is pre-padded to a
         tile_chunk multiple, the query buffer to a bucket size, so every
-        kernel launch hits a warmed compile-cache entry."""
+        kernel launch hits a warmed compile-cache entry. Tiles route to
+        devices through the compiler's cost-LPT schedule (host-side
+        numpy — no effect on the zero-recompile contract)."""
         cfg = self.cfg
-        catalog = pad_catalog_tiles(catalog, cfg.tile_chunk)
-        if self.mesh is None:
-            return score_catalog(
-                feats_a, catalog, jnp.asarray(q_buf),
-                threshold=self._stage1, impl=cfg.kernel_impl,
-                chunk_tiles=cfg.tile_chunk)
-        from .distributed import (pad_device_tiles, plan_tiles_for_devices,
-                                  score_tiles_2src)
-        tiles_dev = pad_device_tiles(
-            plan_tiles_for_devices(catalog, self._n_dev), cfg.tile_chunk)
-        return score_tiles_2src(self._dist_scorer, feats_a, q_buf, tiles_dev,
-                                cfg.tile_chunk, cfg.block_m, cfg.block_n)
+        catalog = pad_catalog(catalog, cfg.tile_chunk)
+        # Scheduling places tiles on devices — a single-host service has
+        # nowhere to place them, so skip the per-batch host work.
+        sched = (schedule_tiles(catalog, n_dev=self._n_dev,
+                                policy=cfg.schedule_policy)
+                 if self.mesh is not None else None)
+        return execute(
+            catalog, feats_a, jnp.asarray(q_buf),
+            threshold=self._stage1, impl=cfg.kernel_impl,
+            mesh=self.mesh, axis=self.axis, schedule=sched,
+            scorer=self._dist_scorer, chunk_tiles=cfg.tile_chunk,
+            fixed_chunks=self.mesh is not None)
 
     # ------------------------------------------------------------------
     # Serving
@@ -311,7 +319,7 @@ class ERService:
                        else plan_pair_range_2src)
             plan = planner(bdm2, cfg.r)
             planned += plan.total_pairs
-            cat = catalog_for_two_source(plan, cfg.block_m, cfg.block_n)
+            cat = lower(plan_to_job(plan), cfg.block_m, cfg.block_n)
             ca, cb = self._score(
                 self._feats_keyed, cat,
                 self._bucket_buffer(feats[q_rows], bucket))
@@ -325,8 +333,8 @@ class ERService:
         # ---- match_⊥, cross-restricted: null queries × whole corpus ----
         null_q = np.flatnonzero(qb < 0)
         if cfg.match_missing_keys and null_q.size:
-            cat = catalog_for_cross(self.n_corpus, int(null_q.size), r=cfg.r,
-                                    block_m=cfg.block_m, block_n=cfg.block_n)
+            cat = lower(cross_job(self.n_corpus, int(null_q.size), cfg.r),
+                        cfg.block_m, cfg.block_n)
             planned += cat.total_pairs
             ca, cb = self._score(
                 self._feats_all, cat,
@@ -341,9 +349,9 @@ class ERService:
         # the null-query job above) ----
         if cfg.match_missing_keys and self._feats_null is not None \
                 and keyed_q.size:
-            cat = catalog_for_cross(int(self._null_idx.size),
-                                    int(keyed_q.size), r=cfg.r,
-                                    block_m=cfg.block_m, block_n=cfg.block_n)
+            cat = lower(cross_job(int(self._null_idx.size),
+                                  int(keyed_q.size), cfg.r),
+                        cfg.block_m, cfg.block_n)
             planned += cat.total_pairs
             ca, cb = self._score(self._feats_null, cat,
                                  self._bucket_buffer(feats[keyed_q], bucket))
