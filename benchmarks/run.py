@@ -22,9 +22,10 @@ def main(argv=None):
                    help="comma-separated subset: fig8,fig9,...,kernels")
     args = p.parse_args(argv)
 
-    from . import (fig8_datasets, fig9_skew, fig10_reduce_tasks,
-                   fig11_sorted, fig12_map_output, fig13_scaling,
-                   fig_sn_window, kernel_bench, schedule_bench)
+    from . import (chaos_bench, fig8_datasets, fig9_skew,
+                   fig10_reduce_tasks, fig11_sorted, fig12_map_output,
+                   fig13_scaling, fig_sn_window, kernel_bench,
+                   schedule_bench)
 
     suites = {
         "fig8": lambda: fig8_datasets.run(quick=args.quick),
@@ -36,6 +37,7 @@ def main(argv=None):
         "sn_window": lambda: fig_sn_window.run(quick=args.quick),
         "kernels": lambda: kernel_bench.run(quick=args.quick),
         "schedule": lambda: schedule_bench.run(quick=args.quick),
+        "chaos": lambda: chaos_bench.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     t0 = time.time()

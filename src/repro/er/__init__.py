@@ -12,11 +12,20 @@ from .blocking import (  # noqa: F401
 from .datasets import Dataset, make_products, make_publications  # noqa: F401
 from .encode import encode_titles, ngram_features  # noqa: F401
 from .compiler import (  # noqa: F401
+    DeviceKilledError,
+    FaultEvent,
+    FaultInjector,
+    FaultScript,
     MatchJob,
+    NoHealthyDevicesError,
+    RecoveryFailedError,
     Schedule,
+    SupervisedReport,
     TileCatalog,
+    TransientScorerError,
     cross_job,
     execute,
+    execute_supervised,
     lower,
     match_catalog,
     plan_to_job,
@@ -27,7 +36,13 @@ from .compiler import (  # noqa: F401
 )
 from .executor import build_catalog  # noqa: F401
 from .pipeline import ERConfig, ERResult, cross_restrict, featurize, run_er  # noqa: F401
-from .service import ERService, ServiceConfig, compile_counter  # noqa: F401
+from .service import (  # noqa: F401
+    ERService,
+    MatchResponse,
+    ServiceConfig,
+    ServiceUnavailable,
+    compile_counter,
+)
 from .similarity import (  # noqa: F401
     cosine_scores,
     edit_distance,

@@ -22,6 +22,14 @@ jobs — flows through the same four stages:
      through the fused kernel, replacing the per-strategy shard_map
      wrappers.
 
+A fifth, optional layer wraps execution in a fault-tolerant supervisor
+(`execute_supervised` + `faults.py`, DESIGN.md §Fault tolerance):
+deterministic seeded fault injection (device kills, stragglers,
+transient scorer errors, corrupted survivor output), per-device-shard
+completion records, and tile-granular recovery — lost tiles are
+re-scheduled over the shrunken healthy mask with bounded exponential
+backoff, and survivors merge exactly-once at the match-set level.
+
 `er/executor.py` and `er/distributed.py` keep their historical entry
 points as thin shims over this package.
 """
@@ -44,6 +52,7 @@ from .lower import (  # noqa: F401
     task_tiles,
 )
 from .schedule import (  # noqa: F401
+    NoHealthyDevicesError,
     Schedule,
     apply_schedule,
     device_assignment,
@@ -51,10 +60,24 @@ from .schedule import (  # noqa: F401
     tile_costs,
     tiles_for_devices,
 )
+from .faults import (  # noqa: F401
+    FAULT_KINDS,
+    CallPlan,
+    DeviceKilledError,
+    FaultEvent,
+    FaultInjector,
+    FaultScript,
+    TransientScorerError,
+)
 from .execute import (  # noqa: F401
+    RecoveryFailedError,
+    ShardRecord,
+    SupervisedReport,
     execute,
+    execute_supervised,
     make_scorer,
     match_catalog,
     score_catalog,
+    shard_sane,
     verify_pairs,
 )

@@ -22,23 +22,32 @@ function identity, so a per-call closure would retrace every batch).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .faults import DeviceKilledError, FaultInjector, TransientScorerError
 from .ir import A_TILE, B_TILE, NCOLS, TileCatalog
 from .lower import pad_tiles
-from .schedule import Schedule, tiles_for_devices
+from .schedule import (NoHealthyDevicesError, Schedule, schedule_tiles,
+                       tile_costs, tiles_for_devices)
 
 __all__ = [
     "execute",
+    "execute_supervised",
     "make_scorer",
     "score_catalog",
     "verify_pairs",
     "match_catalog",
+    "shard_sane",
+    "ShardRecord",
+    "SupervisedReport",
+    "RecoveryFailedError",
 ]
 
 
@@ -247,6 +256,213 @@ def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
                 else (feats_a, jnp.asarray(feats_b)))
     return _score_and_compact(scorer, operands, tiles_dev, chunk, bm, bn,
                               base=base)
+
+
+# ---------------------------------------------------------------------------
+# Supervised stage 1: tile-granular fault recovery
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardRecord:
+    """One per-device-shard completion record, the supervisor's ledger."""
+    round: int
+    device: int
+    tiles: int
+    cost: int                  # live pairs the shard was responsible for
+    status: str                # ok | killed | transient | timeout | corrupt
+    elapsed: float             # wall seconds + injected virtual delay
+
+
+@dataclass
+class SupervisedReport:
+    """What happened during one :func:`execute_supervised` run."""
+    rounds: int = 0            # scheduling rounds executed (1 == quiet run)
+    recovered_tiles: int = 0   # tiles that succeeded on a retry round
+    planned_cost: int = 0      # live pairs the catalog plans
+    scored_cost: int = 0       # live pairs covered by accepted shards
+    lost_tiles: int = 0        # tiles never scored (degraded mode only)
+    records: List[ShardRecord] = field(default_factory=list)
+    backoffs: List[float] = field(default_factory=list)
+    healthy: Optional[np.ndarray] = None   # final device mask
+
+    @property
+    def retries(self) -> int:
+        return max(self.rounds - 1, 0)
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of planned live pairs actually scored — 1.0 after a
+        full recovery, < 1.0 only in degraded (partial) mode."""
+        if self.planned_cost == 0:
+            return 1.0
+        return self.scored_cost / self.planned_cost
+
+
+class RecoveryFailedError(RuntimeError):
+    """Retries/deadline exhausted with tiles still unscored (and the
+    caller did not opt into partial results). Carries the report."""
+
+    def __init__(self, msg: str, report: SupervisedReport):
+        super().__init__(msg)
+        self.report = report
+
+
+def shard_sane(rows_a: np.ndarray, rows_b: np.ndarray,
+               n_a: int, n_b: int) -> bool:
+    """Cheap survivor sanity check: paired 1-D int arrays, every index in
+    bounds. Any corrupted shard from :meth:`FaultInjector.corrupt_output`
+    fails this by construction; a real deployment would run the same
+    check on rows coming back over the wire."""
+    if rows_a.shape != rows_b.shape or rows_a.ndim != 1:
+        return False
+    if rows_a.size == 0:
+        return True
+    return bool((rows_a >= 0).all() and (rows_a < n_a).all()
+                and (rows_b >= 0).all() and (rows_b < n_b).all())
+
+
+def _sub_catalog(catalog: TileCatalog, idx: np.ndarray) -> TileCatalog:
+    return TileCatalog(tiles=catalog.tiles[idx], block_m=catalog.block_m,
+                       block_n=catalog.block_n, n_rows_a=catalog.n_rows_a,
+                       n_rows_b=catalog.n_rows_b, r=catalog.r,
+                       total_pairs=catalog.total_pairs)
+
+
+def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
+                       threshold: float, n_dev: int = 1,
+                       healthy: Optional[np.ndarray] = None,
+                       impl: str = "auto", chunk_tiles: int = 1024,
+                       policy: str = "cost_lpt",
+                       injector: Optional[FaultInjector] = None,
+                       shard_deadline: Optional[float] = None,
+                       deadline: Optional[float] = None,
+                       max_retries: int = 3, backoff: float = 0.05,
+                       backoff_factor: float = 2.0, sleep=time.sleep,
+                       partial: bool = False
+                       ) -> Tuple[np.ndarray, np.ndarray, SupervisedReport]:
+    """Stage 1 with tile-granular fault recovery over logical devices.
+
+    The catalog's tiles are cost-LPT scheduled onto ``n_dev`` logical
+    device shards (the host drives each shard through the kernel exactly
+    as ``execute`` would on a mesh — on a real cluster each shard call
+    is the per-device RPC). Every shard produces a completion record;
+    shards that fail (killed device), time out (wall + injected latency
+    > ``shard_deadline``), raise transiently, or return survivors that
+    fail :func:`shard_sane` are DISCARDED, their device is masked out
+    where the failure indicates device loss (kill/timeout), and ONLY the
+    lost tiles are re-scheduled over the shrunken healthy mask — at most
+    ``max_retries`` extra rounds with exponential backoff
+    (``backoff * backoff_factor**k``).
+
+    Survivors merge idempotently: the catalog covers each planned pair
+    exactly once and results from failed shards are never merged, so
+    re-executing a tile cannot double-count — the final
+    ``np.unique`` over (row_a, row_b) makes recovery exactly-once at the
+    match-set level even if a future policy merges late stragglers.
+
+    ``deadline`` bounds the whole call (seconds); on exhaustion —
+    or when retries run out, or every device dies — the call either
+    raises :class:`RecoveryFailedError` / :class:`NoHealthyDevicesError`
+    or, with ``partial=True``, returns what it has with
+    ``report.coverage < 1`` (the service's graceful-degradation mode).
+
+    Returns ``(rows_a, rows_b, report)`` — deduplicated host int64
+    survivor candidates plus the :class:`SupervisedReport`.
+    """
+    t_start = time.perf_counter()
+    if healthy is None:
+        healthy = np.ones(n_dev, bool)
+    healthy = np.asarray(healthy, bool).copy()
+    costs = tile_costs(catalog)
+    report = SupervisedReport(planned_cost=int(costs.sum()), healthy=healthy)
+    out_a: List[np.ndarray] = [np.zeros(0, np.int64)]
+    out_b: List[np.ndarray] = [np.zeros(0, np.int64)]
+    pending = np.arange(catalog.num_tiles, dtype=np.int64)
+    n_a, n_b = catalog.n_rows_a, catalog.n_rows_b
+
+    def _out_of_time() -> bool:
+        return (deadline is not None
+                and time.perf_counter() - t_start >= deadline)
+
+    while pending.size:
+        if report.rounds > max_retries or _out_of_time():
+            break
+        if report.rounds:                       # retry round: back off
+            b = backoff * backoff_factor ** (report.rounds - 1)
+            report.backoffs.append(b)
+            if b > 0:
+                sleep(b)
+        report.rounds += 1
+        sub = _sub_catalog(catalog, pending)
+        try:
+            sched = schedule_tiles(sub, n_dev=n_dev, healthy=healthy,
+                                   policy=policy)
+        except NoHealthyDevicesError:
+            if partial:
+                break
+            report.lost_tiles = int(pending.size)
+            raise
+        dev_of_tile = sched.reducer_device[sched.tile_reducer]
+        lost: List[np.ndarray] = []
+        for d in np.flatnonzero(healthy):
+            mine = pending[dev_of_tile == d]
+            if mine.size == 0:
+                continue
+            if _out_of_time():
+                lost.append(mine)
+                continue
+            cost = int(costs[mine].sum())
+            t0 = time.perf_counter()
+            status, extra = "ok", 0.0
+            ra = rb = None
+            try:
+                plan = injector.shard_call(int(d)) if injector else None
+                ra, rb = score_catalog(
+                    feats_a, _sub_catalog(catalog, mine), feats_b,
+                    threshold=threshold, impl=impl,
+                    chunk_tiles=chunk_tiles)
+                if plan is not None:
+                    extra = plan.delay
+                    if plan.corrupt:
+                        ra, rb = injector.corrupt_output(ra, rb, n_a, n_b)
+            except DeviceKilledError:
+                status = "killed"
+            except TransientScorerError:
+                status = "transient"
+            elapsed = time.perf_counter() - t0 + extra
+            if status == "ok":
+                if shard_deadline is not None and elapsed > shard_deadline:
+                    status = "timeout"          # straggler: discard output
+                elif not shard_sane(ra, rb, n_a, n_b):
+                    status = "corrupt"          # failed the sanity check
+            report.records.append(ShardRecord(
+                round=report.rounds, device=int(d), tiles=int(mine.size),
+                cost=cost, status=status, elapsed=elapsed))
+            if status == "ok":
+                out_a.append(ra)
+                out_b.append(rb)
+                report.scored_cost += cost
+                if report.rounds > 1:
+                    report.recovered_tiles += int(mine.size)
+            else:
+                lost.append(mine)
+                if status in ("killed", "timeout"):
+                    healthy[d] = False          # device-level failure
+        pending = (np.concatenate(lost) if lost
+                   else np.zeros(0, np.int64))
+
+    report.lost_tiles = int(pending.size)
+    report.healthy = healthy
+    if pending.size and not partial:
+        raise RecoveryFailedError(
+            f"{pending.size} tiles unscored after {report.retries} retries",
+            report)
+    ra = np.concatenate(out_a)
+    rb = np.concatenate(out_b)
+    if ra.size:                                 # exactly-once at the
+        pairs = np.unique(np.stack([ra, rb], axis=1), axis=0)   # match level
+        ra, rb = pairs[:, 0], pairs[:, 1]
+    return ra, rb, report
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,7 @@ from .ir import (A_TILE, B_TILE, R0, R1, C0, C1, TRI, LB_R, LB_C, UB_R,
                  UB_C, BAND, RED, NCOLS, TileCatalog)
 
 __all__ = [
+    "NoHealthyDevicesError",
     "Schedule",
     "tile_costs",
     "schedule_tiles",
@@ -36,6 +37,14 @@ __all__ = [
     "tiles_for_devices",
     "device_assignment",
 ]
+
+
+class NoHealthyDevicesError(ValueError):
+    """Every device in the healthy mask is down — nothing can run.
+
+    A ValueError subclass so callers that matched the former bare
+    ``ValueError("no healthy devices")`` keep working; the service layer
+    turns it into a clean retry-after error instead of a traceback."""
 
 _COST_SLAB = 65_536     # tiles per cost-model slab: caps peak memory at
                         # O(slab · block_m) int64 regardless of plan size
@@ -112,7 +121,7 @@ def device_assignment(r: int, n_dev: int,
         healthy = np.ones(n_dev, bool)
     alive = np.flatnonzero(healthy)
     if alive.size == 0:
-        raise ValueError("no healthy devices")
+        raise NoHealthyDevicesError("no healthy devices")
     return alive[np.arange(r) % alive.size]
 
 
@@ -136,7 +145,7 @@ def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
     healthy = np.asarray(healthy, bool)
     alive = np.flatnonzero(healthy)
     if alive.size == 0:
-        raise ValueError("no healthy devices")
+        raise NoHealthyDevicesError("no healthy devices")
     r = catalog.r
     costs = tile_costs(catalog)
     if policy == "cost_lpt":

@@ -38,14 +38,29 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.pair_range import PairRangePlan, pairs_of_range_jnp
 from ..core.sorted_neighborhood import _w_eff
-from .compiler import (MatchJob, TileCatalog, device_assignment, execute,
-                       lower, make_scorer, pad_tiles, tiles_for_devices)
+from .compiler import (DeviceKilledError, FaultEvent, FaultInjector,
+                       FaultScript, MatchJob, NoHealthyDevicesError,
+                       RecoveryFailedError, SupervisedReport, TileCatalog,
+                       TransientScorerError, device_assignment, execute,
+                       execute_supervised, lower, make_scorer, pad_tiles,
+                       shard_sane, tiles_for_devices)
 from .compiler.execute import _score_and_compact, _smap
 from .compiler.ir import make_job, task_row
 from .similarity import two_stage_match
 
 __all__ = [
     "compute_bdm_sharded",
+    # fault-tolerant runtime (shim passthrough over er/compiler)
+    "DeviceKilledError",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultScript",
+    "NoHealthyDevicesError",
+    "RecoveryFailedError",
+    "SupervisedReport",
+    "TransientScorerError",
+    "execute_supervised",
+    "shard_sane",
     "match_catalog_dist",
     "match_catalog_2src_dist",
     "make_catalog_2src_scorer",

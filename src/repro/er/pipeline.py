@@ -53,7 +53,8 @@ from ..core.two_source import TwoSourceBDM, plan_pair_range_2src, pairs_of_range
 from .blocking import prefix_block_ids, sn_sort_order
 from .encode import encode_titles, ngram_features
 from .compiler import (apply_schedule, cross_job, enumerate_task_pairs,
-                       lower, match_catalog, plan_to_job, schedule_tiles)
+                       execute_supervised, lower, match_catalog, plan_to_job,
+                       schedule_tiles, verify_pairs)
 
 __all__ = ["ERConfig", "ERResult", "run_er", "featurize", "cross_restrict"]
 
@@ -97,6 +98,12 @@ class ERConfig:
     block_n: int = 128                 # catalog tile cols
     kernel_impl: str = "auto"          # auto | pallas | interpret | xla
     schedule_policy: str = "cost_lpt"  # cost_lpt | round_robin
+    # ---- fault-tolerant execution (catalog executor only) ----
+    supervised_devices: int = 0        # > 0: stage 1 through the supervisor
+                                       # on N logical device shards
+    max_retries: int = 3               # recovery rounds per supervised job
+    shard_deadline_s: Optional[float] = None   # straggler cutoff per shard
+    backoff_s: float = 0.0             # base retry backoff (exponential)
 
 
 @dataclass
@@ -111,6 +118,9 @@ class ERResult:
     config: Optional[ERConfig] = None  # the (fresh) config this run used
     schedule: Optional[Dict] = None    # compiler Schedule.stats() (catalog
                                        # executor): reducer/device imbalance
+    attempts: int = 1                  # supervisor rounds (1 == quiet run)
+    recovered_tiles: int = 0           # tiles re-executed after a failure
+    coverage: float = 1.0              # live pairs scored / planned
 
     @property
     def makespan_seconds(self) -> float:
@@ -200,7 +210,8 @@ def _reference_reducer_rows(plan, r: int) -> List[Tuple[np.ndarray, np.ndarray]]
 
 
 def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
-           block_ids: Optional[np.ndarray] = None) -> ERResult:
+           block_ids: Optional[np.ndarray] = None,
+           fault_injector=None) -> ERResult:
     """Match a single source. ``block_ids`` overrides prefix blocking (used
     by the Fig. 9 skew study; ignored by ``strategy="sorted_neighborhood"``,
     which partitions a sliding window over the sort order, not blocks).
@@ -208,11 +219,22 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     ``config=None`` builds a fresh default ``ERConfig`` per call (a shared
     mutable default instance would leak mutations across calls); the
     resolved config is returned on ``ERResult.config``.
+
+    With ``cfg.supervised_devices > 0`` (or a ``fault_injector``), the
+    catalog executor's stage 1 runs through the fault-tolerant supervisor
+    (``compiler.execute_supervised``) on that many logical device shards;
+    ``ERResult.attempts`` / ``recovered_tiles`` / ``coverage`` report what
+    recovery did. The recovery invariant — the match set equals the
+    failure-free run for any injected failure sequence — is the
+    supervisor's headline contract (DESIGN.md §Fault tolerance).
     """
     n = len(titles)
     cfg = config if config is not None else ERConfig()
     if cfg.executor not in ("catalog", "reference"):
         raise ValueError(f"unknown executor {cfg.executor!r}")
+    supervised = cfg.supervised_devices > 0 or fault_injector is not None
+    if supervised and cfg.executor != "catalog":
+        raise ValueError("supervised execution requires executor='catalog'")
 
     # ---- featurize once (shared by both jobs) ----
     codes, lens, feats = featurize(titles, cfg)
@@ -283,6 +305,26 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     matches: Set[Tuple[int, int]] = set()
     reducer_seconds = np.zeros(cfg.r)
     sched_report: Optional[Dict] = None
+    attempts, recovered_tiles = 1, 0
+    planned_cost, scored_cost = 0, 0
+
+    def _supervised_stage1(catalog, feats_a, feats_b=None):
+        """Stage 1 through the fault-tolerant supervisor; folds the
+        report into the run-level recovery accounting."""
+        nonlocal attempts, recovered_tiles, planned_cost, scored_cost
+        ca, cb, rep = execute_supervised(
+            catalog, feats_a, feats_b,
+            threshold=cfg.threshold - cfg.filter_margin,
+            n_dev=max(cfg.supervised_devices, 1), impl=cfg.kernel_impl,
+            policy=cfg.schedule_policy, injector=fault_injector,
+            shard_deadline=cfg.shard_deadline_s,
+            max_retries=cfg.max_retries, backoff=cfg.backoff_s)
+        attempts = max(attempts, rep.rounds)
+        recovered_tiles += rep.recovered_tiles
+        planned_cost += rep.planned_cost
+        scored_cost += rep.scored_cost
+        return ca, cb
+
     if cfg.executor == "catalog":
         # The compiler pipeline: lower the plan to MXU tiles, place tiles
         # by exact live-pair cost (LPT), score them all on the kernel,
@@ -294,10 +336,16 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
         sched = schedule_tiles(catalog, policy=cfg.schedule_policy)
         sched_report = sched.stats()
         t0 = time.perf_counter()
-        ha, hb = match_catalog(
-            apply_schedule(catalog, sched), g_feats, g_codes, g_lens,
-            threshold=cfg.threshold, filter_margin=cfg.filter_margin,
-            impl=cfg.kernel_impl)
+        if supervised:
+            ca, cb = _supervised_stage1(
+                apply_schedule(catalog, sched), g_feats)
+            ha, hb = verify_pairs(g_codes, g_lens, g_codes, g_lens,
+                                  ca, cb, cfg.threshold)
+        else:
+            ha, hb = match_catalog(
+                apply_schedule(catalog, sched), g_feats, g_codes, g_lens,
+                threshold=cfg.threshold, filter_margin=cfg.filter_margin,
+                impl=cfg.kernel_impl)
         elapsed = time.perf_counter() - t0
         for a, b in zip(to_global[ha], to_global[hb]):
             matches.add((min(int(a), int(b)), max(int(a), int(b))))
@@ -326,12 +374,17 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
         if cfg.executor == "catalog":
             cross = lower(cross_job(n, int(null_idx.size), cfg.r),
                           cfg.block_m, cfg.block_n)
-            ha, hb = match_catalog(
-                cross, feats, codes, lens,
-                feats_b=feats[null_idx], codes_b=codes[null_idx],
-                lens_b=lens[null_idx],
-                threshold=cfg.threshold, filter_margin=cfg.filter_margin,
-                impl=cfg.kernel_impl)
+            if supervised:
+                ca, cb = _supervised_stage1(cross, feats, feats[null_idx])
+                ha, hb = verify_pairs(codes, lens, codes[null_idx],
+                                      lens[null_idx], ca, cb, cfg.threshold)
+            else:
+                ha, hb = match_catalog(
+                    cross, feats, codes, lens,
+                    feats_b=feats[null_idx], codes_b=codes[null_idx],
+                    lens_b=lens[null_idx],
+                    threshold=cfg.threshold, filter_margin=cfg.filter_margin,
+                    impl=cfg.kernel_impl)
             for a, b in zip(ha, null_idx[hb]):
                 a, b = int(a), int(b)
                 if a != b:
@@ -360,4 +413,7 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
         extra=extra,
         config=cfg,
         schedule=sched_report,
+        attempts=attempts,
+        recovered_tiles=recovered_tiles,
+        coverage=(scored_cost / planned_cost if planned_cost else 1.0),
     )

@@ -42,6 +42,7 @@ oracle.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -54,23 +55,42 @@ from ..core import blocked_layout, compute_bdm, entity_indices, update_bdm
 from ..core.two_source import (TwoSourceBDM, plan_block_split_2src,
                                plan_pair_range_2src)
 from .blocking import prefix_key
-from .compiler import (cross_job, execute, lower, make_scorer, pad_catalog,
+from .compiler import (DeviceKilledError, NoHealthyDevicesError,
+                       RecoveryFailedError, SupervisedReport,
+                       TransientScorerError, cross_job, execute,
+                       execute_supervised, lower, make_scorer, pad_catalog,
                        plan_to_job, schedule_tiles, verify_pairs)
 from .compiler.execute import _resolve_impl
+from .compiler.faults import FaultInjector
 from .pipeline import featurize
 
-__all__ = ["ServiceConfig", "ERService", "compile_counter"]
+__all__ = ["ServiceConfig", "ERService", "MatchResponse",
+           "ServiceUnavailable", "compile_counter"]
 
 
 _COMPILE_EVENT_PREFIX = "/jax/core/compile/backend_compile"
+_COUNTER_LOCK = threading.Lock()
 _ACTIVE_COUNTERS: set = set()
 _listener_registered = False
 
 
 def _on_compile_event(name: str, *args, **kwargs):
     if name.startswith(_COMPILE_EVENT_PREFIX):
-        for counter in tuple(_ACTIVE_COUNTERS):
-            counter.count += 1
+        with _COUNTER_LOCK:
+            for counter in _ACTIVE_COUNTERS:
+                counter.count += 1
+
+
+def _unregister_compile_listener() -> bool:
+    """Best-effort unregister (jax exposes the hook privately); returns
+    whether the listener was actually removed."""
+    try:
+        from jax._src import monitoring as _monitoring
+        _monitoring._unregister_event_duration_listener_by_callback(
+            _on_compile_event)
+        return True
+    except Exception:
+        return False
 
 
 class compile_counter:
@@ -79,24 +99,86 @@ class compile_counter:
     service warmup the steady-state count must be exactly zero (the
     recompile guard the tests and the serve benchmark assert).
 
-    One module-level listener is registered lazily and kept forever
-    (jax exposes no public unregister); counters subscribe to it only
-    while their ``with`` block is live, so arbitrarily many blocks in a
-    long-lived server add no per-event overhead once exited."""
+    Thread-safe and re-entrant: the module-level listener is registered
+    while any counter is live and unregistered when the last one exits
+    (falling back to keep-registered on jax versions without the
+    unregister hook), subscription and increments share one lock, and
+    the same instance can be nested — the count resets only on the
+    outermost ``__enter__``. Counters are global: a counter sees
+    compilations triggered by *other* threads while it is open, which is
+    exactly what a steady-state ZERO assertion wants."""
+
+    def __init__(self):
+        self.count = 0
+        self._depth = 0
 
     def __enter__(self) -> "compile_counter":
         global _listener_registered
-        self.count = 0
-        if not _listener_registered:
-            jax.monitoring.register_event_duration_secs_listener(
-                _on_compile_event)
-            _listener_registered = True
-        _ACTIVE_COUNTERS.add(self)
+        with _COUNTER_LOCK:
+            if self._depth == 0:
+                self.count = 0
+            self._depth += 1
+            if not _listener_registered:
+                jax.monitoring.register_event_duration_secs_listener(
+                    _on_compile_event)
+                _listener_registered = True
+            _ACTIVE_COUNTERS.add(self)
         return self
 
     def __exit__(self, *exc):
-        _ACTIVE_COUNTERS.discard(self)
+        global _listener_registered
+        with _COUNTER_LOCK:
+            self._depth -= 1
+            if self._depth <= 0:
+                _ACTIVE_COUNTERS.discard(self)
+                if not _ACTIVE_COUNTERS and _listener_registered \
+                        and _unregister_compile_listener():
+                    _listener_registered = False
         return False
+
+
+class ServiceUnavailable(RuntimeError):
+    """Clean service-level failure: every execution device is evicted
+    (circuit breaker open) or died mid-request. Carries retry-after
+    semantics — clients should back off ``retry_after_s`` seconds, by
+    which time a breaker cooldown will have elapsed and the next request
+    will probe the evicted devices."""
+
+    def __init__(self, msg: str, retry_after_s: float = 1.0):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
+
+
+class MatchResponse(set):
+    """``ERService.match``'s result: behaves exactly like the historical
+    ``set`` of (corpus_index, query_index) pairs, with degradation
+    metadata on the side. ``coverage`` is live pairs scored / planned —
+    1.0 on the quiet path and after any full recovery; < 1.0 only when
+    the service returned partial results instead of failing."""
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        self.attempts = 1          # max supervisor rounds over the jobs
+        self.recovered_tiles = 0   # tiles recovered on retry rounds
+        self.degraded = False      # True iff coverage < 1.0
+        self.planned_cost = 0      # live pairs planned across jobs
+        self.scored_cost = 0       # live pairs actually scored
+
+    @property
+    def coverage(self) -> float:
+        if self.planned_cost == 0:
+            return 1.0
+        return self.scored_cost / self.planned_cost
+
+    def _fold(self, report: Optional[SupervisedReport]):
+        if report is None:
+            return
+        self.attempts = max(self.attempts, report.rounds)
+        self.recovered_tiles += report.recovered_tiles
+        self.planned_cost += report.planned_cost
+        self.scored_cost += report.scored_cost
+        if report.lost_tiles:
+            self.degraded = True
 
 
 @dataclass
@@ -117,6 +199,17 @@ class ServiceConfig:
     query_buckets: Tuple[int, ...] = (8, 32, 128, 512)  # batch pad sizes
     tile_chunk: int = 256                 # fixed catalog chunk (tiles/launch)
     schedule_policy: str = "cost_lpt"     # cost_lpt | round_robin
+    # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
+    exec_devices: int = 0                 # > 0: supervised stage 1 over N
+                                          # logical device shards
+    request_deadline_s: Optional[float] = None  # per-request wall budget
+    shard_deadline_s: Optional[float] = None    # per-shard straggler cutoff
+    max_retries: int = 3                  # extra recovery rounds per job
+    backoff_s: float = 0.02               # base retry backoff (exponential)
+    backoff_factor: float = 2.0
+    partial_results: bool = True          # degrade instead of failing
+    breaker_threshold: int = 3            # consecutive failures → evict
+    breaker_cooldown_s: float = 0.5       # probe an evicted device after this
 
 
 class ERService:
@@ -137,6 +230,16 @@ class ERService:
         self.mesh = mesh
         self.axis = axis
         self._n_dev = int(mesh.shape[axis]) if mesh is not None else 1
+        if cfg.exec_devices > 0 and mesh is not None:
+            raise ValueError(
+                "supervised execution (exec_devices > 0) drives logical "
+                "device shards host-side; it composes with mesh=None only")
+        self._n_exec = max(cfg.exec_devices, 1)
+        self.fault_injector: Optional[FaultInjector] = None
+        self._fail_streak = np.zeros(self._n_exec, np.int64)
+        self._breaker_open: Dict[int, float] = {}   # device → eviction time
+        self._reports: List[SupervisedReport] = []  # per-request scratch
+        self._deadline_at: Optional[float] = None   # per-request deadline
         self._buckets = tuple(sorted(cfg.query_buckets))
         if not self._buckets:
             raise ValueError("query_buckets must be non-empty")
@@ -179,7 +282,10 @@ class ERService:
         self._traffic_bdm = np.zeros((len(self._vocab), 1), np.int64)
         self.stats: Dict = {"batches": 0, "queries": 0, "planned_pairs": 0,
                             "matches": 0, "seconds": 0.0,
-                            "bucket_hits": {b: 0 for b in self._buckets}}
+                            "bucket_hits": {b: 0 for b in self._buckets},
+                            "retries": 0, "recovered_tiles": 0,
+                            "degraded": 0, "breaker_evictions": 0,
+                            "breaker_readmissions": 0}
 
         self._dist_scorer = None
         if mesh is not None:
@@ -256,9 +362,15 @@ class ERService:
         tile_chunk multiple, the query buffer to a bucket size, so every
         kernel launch hits a warmed compile-cache entry. Tiles route to
         devices through the compiler's cost-LPT schedule (host-side
-        numpy — no effect on the zero-recompile contract)."""
+        numpy — no effect on the zero-recompile contract). With
+        supervision enabled (``cfg.exec_devices`` or an installed fault
+        injector), stage 1 runs through :func:`execute_supervised`
+        instead — per-shard completion records, tile-granular recovery,
+        graceful degradation."""
         cfg = self.cfg
         catalog = pad_catalog(catalog, cfg.tile_chunk)
+        if self._use_supervisor:
+            return self._score_supervised(feats_a, catalog, q_buf)
         # Scheduling places tiles on devices — a single-host service has
         # nowhere to place them, so skip the per-batch host work.
         sched = (schedule_tiles(catalog, n_dev=self._n_dev,
@@ -272,38 +384,161 @@ class ERService:
             fixed_chunks=self.mesh is not None)
 
     # ------------------------------------------------------------------
+    # Fault-tolerant execution: supervisor + circuit breaker
+    # ------------------------------------------------------------------
+
+    @property
+    def _use_supervisor(self) -> bool:
+        return self.cfg.exec_devices > 0 or self.fault_injector is not None
+
+    def set_fault_injector(self, injector: Optional[FaultInjector]):
+        """Install (or clear) a chaos :class:`FaultInjector` — every
+        supervised shard call and breaker probe flows through it. Install
+        AFTER :meth:`warmup` so warmup traffic doesn't consume script
+        events."""
+        self.fault_injector = injector
+
+    def _exec_mask(self) -> np.ndarray:
+        """Healthy mask over the logical execution devices: everything
+        minus the breaker-evicted set."""
+        mask = np.ones(self._n_exec, bool)
+        for d in self._breaker_open:
+            mask[d] = False
+        return mask
+
+    def _probe_evicted(self):
+        """Re-admission path: once an evicted device's cooldown elapses,
+        probe it (one injector shard call — a trivially cheap health RPC
+        in a real deployment). Probe success re-admits the device and
+        resets its failure streak; failure restarts the cooldown."""
+        now = time.monotonic()
+        for d, opened in list(self._breaker_open.items()):
+            if now - opened < self.cfg.breaker_cooldown_s:
+                continue
+            ok = True
+            if self.fault_injector is not None:
+                try:
+                    self.fault_injector.shard_call(d)
+                except (DeviceKilledError, TransientScorerError):
+                    ok = False
+            if ok:
+                del self._breaker_open[d]
+                self._fail_streak[d] = 0
+                self.stats["breaker_readmissions"] += 1
+            else:
+                self._breaker_open[d] = now
+
+    def _update_breaker(self, report: SupervisedReport):
+        """Fold a job's shard records into the per-device failure
+        streaks; devices at ``breaker_threshold`` consecutive failures
+        are evicted until a probe succeeds."""
+        now = time.monotonic()
+        for rec in report.records:
+            if rec.status == "ok":
+                self._fail_streak[rec.device] = 0
+            else:
+                self._fail_streak[rec.device] += 1
+                if (self._fail_streak[rec.device]
+                        >= self.cfg.breaker_threshold
+                        and rec.device not in self._breaker_open):
+                    self._breaker_open[rec.device] = now
+                    self.stats["breaker_evictions"] += 1
+
+    def _retry_after(self) -> float:
+        """Seconds until the earliest evicted device becomes probeable."""
+        if not self._breaker_open:
+            return max(self.cfg.backoff_s, 1e-3)
+        now = time.monotonic()
+        rem = min(self.cfg.breaker_cooldown_s - (now - t)
+                  for t in self._breaker_open.values())
+        return max(rem, 1e-3)
+
+    def _score_supervised(self, feats_a, catalog, q_buf: np.ndarray):
+        """Stage 1 through the fault-tolerant supervisor on
+        ``cfg.exec_devices`` logical shards. Collects the report for the
+        request-level coverage aggregation and feeds the breaker."""
+        cfg = self.cfg
+        self._probe_evicted()
+        healthy = self._exec_mask()
+        if not healthy.any():
+            raise ServiceUnavailable(
+                "all execution devices are circuit-broken",
+                retry_after_s=self._retry_after())
+        remaining = None
+        if self._deadline_at is not None:
+            remaining = max(self._deadline_at - time.perf_counter(), 0.0)
+        try:
+            ra, rb, report = execute_supervised(
+                catalog, feats_a, jnp.asarray(q_buf),
+                threshold=self._stage1, n_dev=self._n_exec,
+                healthy=healthy, impl=cfg.kernel_impl,
+                chunk_tiles=cfg.tile_chunk, policy=cfg.schedule_policy,
+                injector=self.fault_injector,
+                shard_deadline=cfg.shard_deadline_s, deadline=remaining,
+                max_retries=cfg.max_retries, backoff=cfg.backoff_s,
+                backoff_factor=cfg.backoff_factor,
+                partial=cfg.partial_results)
+        except NoHealthyDevicesError as e:
+            # Only reachable with partial_results=False: every device
+            # died mid-job. Surface retry-after instead of a traceback.
+            raise ServiceUnavailable(
+                str(e), retry_after_s=self._retry_after()) from e
+        self._update_breaker(report)
+        self._reports.append(report)
+        return ra, rb
+
+    # ------------------------------------------------------------------
     # Serving
     # ------------------------------------------------------------------
 
     def match(self, query_titles: Sequence[str],
-              _record: bool = True) -> Set[Tuple[int, int]]:
+              _record: bool = True) -> "MatchResponse":
         """Match a query micro-batch against the resident corpus.
 
-        Returns {(corpus_index, query_index_within_batch)} with exact
-        verified similarity >= cfg.threshold — by construction equal to a
-        one-shot ``run_er(corpus ++ batch)`` restricted to cross pairs.
-        Batches larger than the top bucket are served in top-bucket
-        slices.
+        Returns a :class:`MatchResponse` — a set of (corpus_index,
+        query_index_within_batch) pairs with exact verified similarity
+        >= cfg.threshold, by construction equal to a one-shot
+        ``run_er(corpus ++ batch)`` restricted to cross pairs — plus
+        degradation metadata (``coverage``, ``attempts``,
+        ``recovered_tiles``, ``degraded``). Batches larger than the top
+        bucket are served in top-bucket slices.
+
+        With supervision enabled, a per-request deadline
+        (``cfg.request_deadline_s``) bounds recovery; on exhaustion the
+        response carries the survivors found so far with
+        ``coverage < 1`` (``cfg.partial_results``) instead of failing.
+        :class:`ServiceUnavailable` (with ``retry_after_s``) is raised
+        only when every execution device is circuit-broken.
         """
         query_titles = list(query_titles)
         nq = len(query_titles)
         if nq == 0 or self.n_corpus == 0:
-            return set()
+            return MatchResponse()
         cap = self._buckets[-1]
         if nq > cap:
-            out: Set[Tuple[int, int]] = set()
+            out = MatchResponse()
             for lo in range(0, nq, cap):
-                for a, b in self.match(query_titles[lo:lo + cap],
-                                       _record=_record):
+                part = self.match(query_titles[lo:lo + cap],
+                                  _record=_record)
+                for a, b in part:
                     out.add((a, b + lo))
+                out.attempts = max(out.attempts, part.attempts)
+                out.recovered_tiles += part.recovered_tiles
+                out.planned_cost += part.planned_cost
+                out.scored_cost += part.scored_cost
+                out.degraded = out.degraded or part.degraded
             return out
 
         t0 = time.perf_counter()
+        self._deadline_at = (t0 + self.cfg.request_deadline_s
+                             if self.cfg.request_deadline_s is not None
+                             else None)
+        self._reports = []
         bucket = self._bucket(nq)
         cfg = self.cfg
         codes, lens, feats = featurize(query_titles, cfg)
         qb = self._query_block_ids(query_titles, record=_record)
-        matches: Set[Tuple[int, int]] = set()
+        matches = MatchResponse()
         planned = 0
 
         # ---- keyed queries × same-block corpus (two-source R × S) ----
@@ -362,6 +597,9 @@ class ERService:
                 (int(self._null_idx[a]), int(keyed_q[b]))
                 for a, b in zip(ha, hb))
 
+        for report in self._reports:
+            matches._fold(report)
+        self._reports = []
         if _record:
             s = self.stats
             s["batches"] += 1
@@ -370,6 +608,9 @@ class ERService:
             s["matches"] += len(matches)
             s["seconds"] += time.perf_counter() - t0
             s["bucket_hits"][bucket] += 1
+            s["retries"] += max(matches.attempts - 1, 0)
+            s["recovered_tiles"] += matches.recovered_tiles
+            s["degraded"] += int(matches.degraded)
         return matches
 
     def warmup(self) -> int:

@@ -1,0 +1,141 @@
+"""Service-level graceful degradation (DESIGN.md §Fault tolerance):
+``ERService.match`` over the supervised executor survives chaos — kills
+recover to the exact quiet match set, repeatedly-failing devices are
+circuit-broken and re-admitted after a probe succeeds, an exhausted
+request deadline or retry budget degrades to partial results with
+``coverage < 1`` instead of failing, and a fully-broken service raises
+the typed :class:`ServiceUnavailable` with retry-after semantics."""
+import numpy as np
+import pytest
+
+from repro.er import (ERService, MatchResponse, ServiceConfig,
+                      ServiceUnavailable, make_products)
+from repro.er.compiler import FaultEvent, FaultInjector, FaultScript
+
+DS = make_products(250, seed=3)
+CORPUS = DS.titles[:140]
+QUERIES = DS.titles[140:170]
+
+
+def _cfg(**kw):
+    base = dict(feature_dim=128, max_len=48, r=8, m=4,
+                query_buckets=(8, 32), tile_chunk=64)
+    base.update(kw)
+    return ServiceConfig(**base)
+
+
+def _quiet_answers(batches):
+    svc = ERService(CORPUS, _cfg())
+    return [set(svc.match(b)) for b in batches]
+
+
+def test_supervised_quiet_path_equals_unsupervised():
+    batches = [QUERIES[:6], QUERIES[6:14], QUERIES[14:22]]
+    want = _quiet_answers(batches)
+    svc = ERService(CORPUS, _cfg(exec_devices=4))
+    for batch, w in zip(batches, want):
+        resp = svc.match(batch)
+        assert isinstance(resp, MatchResponse) and isinstance(resp, set)
+        assert set(resp) == w
+        assert resp.coverage == 1.0 and resp.attempts == 1
+        assert not resp.degraded
+    assert svc.stats["retries"] == 0
+    assert svc.stats["breaker_evictions"] == 0
+
+
+def test_chaos_kills_recover_to_exact_match_set():
+    batches = [QUERIES[:8], QUERIES[8:16], QUERIES[16:24], QUERIES[:8]]
+    want = _quiet_answers(batches)
+    svc = ERService(CORPUS, _cfg(exec_devices=4, backoff_s=0.0,
+                                 breaker_threshold=2,
+                                 breaker_cooldown_s=1e9))
+    svc.set_fault_injector(FaultInjector(FaultScript(events=(
+        FaultEvent("kill", 1, 0),
+        FaultEvent("corrupt", 2, 2),
+        FaultEvent("transient", 3, 5),
+        FaultEvent("kill", 2, 7)), n_dev=4)))
+    for batch, w in zip(batches, want):
+        resp = svc.match(batch)
+        assert set(resp) == w                 # full recovery, every batch
+        assert resp.coverage == 1.0 and not resp.degraded
+    assert svc.stats["retries"] > 0
+    assert svc.stats["recovered_tiles"] > 0
+    assert svc.stats["degraded"] == 0
+    # dead devices kept failing → the breaker took them out of rotation
+    assert svc.stats["breaker_evictions"] >= 1
+
+
+def test_breaker_opens_then_service_unavailable():
+    svc = ERService(CORPUS, _cfg(exec_devices=2, backoff_s=0.0,
+                                 breaker_threshold=1,
+                                 breaker_cooldown_s=1e9))
+    svc.set_fault_injector(FaultInjector(FaultScript(events=(
+        FaultEvent("kill", 0, 0), FaultEvent("kill", 1, 0)), n_dev=2)))
+    resp = svc.match(QUERIES[:6])             # everything dies mid-job →
+    assert resp.degraded and resp.coverage < 1.0   # partial, not a crash
+    assert len(resp) == 0
+    assert svc.stats["breaker_evictions"] == 2
+    with pytest.raises(ServiceUnavailable) as ei:  # breaker fully open
+        svc.match(QUERIES[:6])
+    assert ei.value.retry_after_s > 0
+
+
+def test_all_devices_dead_without_partial_is_typed_error():
+    svc = ERService(CORPUS, _cfg(exec_devices=2, backoff_s=0.0,
+                                 partial_results=False))
+    svc.set_fault_injector(FaultInjector(FaultScript(events=(
+        FaultEvent("kill", 0, 0), FaultEvent("kill", 1, 0)), n_dev=2)))
+    with pytest.raises(ServiceUnavailable) as ei:
+        svc.match(QUERIES[:6])                # clean retry-after, no
+    assert ei.value.retry_after_s > 0         # traceback soup for clients
+
+
+def test_breaker_probe_readmits_after_revive():
+    want = _quiet_answers([QUERIES[:6]])[0]
+    svc = ERService(CORPUS, _cfg(exec_devices=2, backoff_s=0.0,
+                                 breaker_threshold=1,
+                                 breaker_cooldown_s=0.0))
+    svc.set_fault_injector(FaultInjector(FaultScript(events=(
+        FaultEvent("kill", 1, 0), FaultEvent("revive", 1, 10)), n_dev=2)))
+    for _ in range(8):                        # serve until a probe lands
+        assert set(svc.match(QUERIES[:6])) == want
+    assert svc.stats["breaker_evictions"] >= 1
+    assert svc.stats["breaker_readmissions"] >= 1
+    assert not svc._breaker_open              # device 1 back in rotation
+
+
+def test_request_deadline_degrades_to_partial():
+    svc = ERService(CORPUS, _cfg(exec_devices=2, request_deadline_s=0.0))
+    resp = svc.match(QUERIES[:6])
+    assert resp.degraded and resp.coverage < 1.0
+    assert len(resp) == 0                     # nothing scored in 0 seconds
+    assert svc.stats["degraded"] == 1
+
+
+def test_retry_exhaustion_degrades_to_partial_coverage():
+    svc = ERService(CORPUS, _cfg(exec_devices=1, max_retries=1,
+                                 backoff_s=0.0))
+    svc.set_fault_injector(FaultInjector(FaultScript(events=tuple(
+        FaultEvent("corrupt", 0, 0) for _ in range(100)), n_dev=1)))
+    resp = svc.match(QUERIES[:6])             # every round corrupts →
+    assert resp.degraded and resp.coverage < 1.0   # survivors kept anyway
+    assert resp.attempts == 2                 # 1 round + max_retries
+
+
+def test_match_response_behaves_like_the_historical_set():
+    svc = ERService(CORPUS, _cfg())
+    resp = svc.match(QUERIES[:4])
+    assert resp == set(resp)                  # plain-set equality
+    assert (resp | {(0, 99)}) >= resp         # set algebra still works
+    empty = svc.match([])
+    assert isinstance(empty, MatchResponse) and len(empty) == 0
+    assert empty.coverage == 1.0 and not empty.degraded
+
+
+def test_supervised_refuses_mesh():
+    class FakeMesh:
+        shape = {"data": 1}
+
+    with pytest.raises(ValueError):
+        ERService(CORPUS[:10], _cfg(exec_devices=2),
+                  mesh=FakeMesh(), axis="data")

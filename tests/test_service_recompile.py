@@ -27,6 +27,74 @@ def test_compile_counter_sees_compiles():
     assert c2.count == 0
 
 
+def test_compile_counter_is_reentrant():
+    """Nesting the SAME instance keeps one counting window: the count
+    resets only on the outermost __enter__, and the inner __exit__ does
+    not tear the window down."""
+    import jax, jax.numpy as jnp
+
+    c = compile_counter()
+    with c:
+        @jax.jit
+        def f(x):
+            return x * 3
+
+        f(jnp.ones(7)).block_until_ready()
+        seen = c.count
+        assert seen > 0
+        with c:                              # nested enter: no reset
+            assert c.count == seen
+        assert c.count == seen               # inner exit: still counting
+
+        @jax.jit
+        def g(x):
+            return x * 5
+
+        g(jnp.ones(9)).block_until_ready()
+        assert c.count > seen
+    final = c.count
+    # outside every counter, compilations are no longer attributed
+    @jax.jit
+    def h(x):
+        return x * 7
+
+    h(jnp.ones(11)).block_until_ready()
+    assert c.count == final
+
+
+def test_compile_counter_concurrent_threads():
+    """Concurrent counters don't race on listener (un)registration, and
+    each open counter observes at least its own thread's compilation
+    (counters are global by design — cross-thread compiles count too)."""
+    import threading
+
+    import jax, jax.numpy as jnp
+
+    n = 4
+    barrier = threading.Barrier(n)
+    errors = []
+
+    def worker(k):
+        try:
+            @jax.jit
+            def f(x):                        # fresh identity + shape per
+                return x + k                 # thread → guaranteed compile
+
+            barrier.wait()
+            with compile_counter() as c:
+                f(jnp.ones(3 + k)).block_until_ready()
+            assert c.count >= 1, f"thread {k} saw no compilations"
+        except Exception as e:               # surface into the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+
 def test_zero_steady_state_recompiles():
     ds = make_products(450, seed=3)
     corpus = ds.titles[:400] + [""]          # null-key corpus row too
