@@ -87,6 +87,12 @@ def executor_drill(n: int, r: int, n_scripts: int):
                 "failed_shards": sum(s != "ok" for s in statuses),
                 "coverage": rep.coverage,
                 "recovery_s": round(t.seconds, 4),
+                # real wall seconds vs injected virtual delay, split per
+                # record — chaos scripts must not poison latency stats
+                "shard_real_s": round(sum(rec.elapsed
+                                          for rec in rep.records), 4),
+                "shard_injected_s": round(sum(rec.injected_delay
+                                              for rec in rep.records), 4),
                 "exact": True,
             })
     return rows
@@ -154,7 +160,7 @@ def run(n: int = 4_000, r: int = 32, n_scripts: int = 6,
         f"{n_scripts} scripts × {len(STRATEGIES)} strategies)", exec_rows,
         cols=["strategy", "seed", "events", "rounds", "retries",
               "recovered_tiles", "failed_shards", "coverage",
-              "recovery_s", "exact"])
+              "recovery_s", "shard_real_s", "shard_injected_s", "exact"])
     svc_rows = [row for row in rows if row["drill"] == "service"]
     print_table("chaos_bench — service drill (kills + revive, breaker)",
                 svc_rows,

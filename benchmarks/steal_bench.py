@@ -1,0 +1,110 @@
+"""Straggle drill for runtime-feedback scheduling (DESIGN.md
+§Scheduling feedback loop): the paper's Fig. 9 robustness workload
+(b = 100 blocks, |Φ_k| ∝ e^{−s·k}, s = 1.0) on 8 simulated devices, two
+of which carry a seeded *sticky* straggle — every shard call on them
+pays a fixed virtual delay, the persistent slow-node regime static LPT
+cannot see.
+
+Each strategy runs twice through ``execute_supervised`` with the SAME
+dispatch quantum: once static (no stealing — the slow devices grind
+through their full queues) and once with the EWMA feedback model and
+mid-stream work stealing enabled. Both runs must return EXACTLY the
+failure-free (quiet) survivor set; the steal run must cut the simulated
+busy-time makespan by at least ``WIN_FLOOR`` (asserted — the CI bar),
+because queued tiles migrate off the slow devices after the first
+measured calls expose them.
+
+Rows land in ``benchmarks/out/steal_bench.json``.
+
+    PYTHONPATH=src python -m benchmarks.steal_bench [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.er.compiler import (EwmaCostModel, FaultEvent, FaultInjector,
+                               FaultScript, execute, execute_supervised)
+
+from .chaos_bench import N_DEV, THRESH, _pairs, _workload
+from .common import print_table, save_rows, timer
+
+SLOW_DEVICES = (1, 6)        # seeded stragglers (of N_DEV = 8)
+SLOW_DELAY_S = 0.25          # virtual seconds added to EVERY call on them
+QUANTUM = 8                  # dispatch batch size, identical in both modes
+STEAL_FACTOR = 2.0           # steal when projected finish > 2× fleet median
+WIN_FLOOR = 1.5              # asserted minimum static/steal makespan ratio
+
+
+def _script() -> FaultScript:
+    return FaultScript(events=tuple(
+        FaultEvent("straggle", d, 0, delay=SLOW_DELAY_S, sticky=True)
+        for d in SLOW_DEVICES), n_dev=N_DEV)
+
+
+def _run(cat, feats, want, steal: bool):
+    ra, rb, rep = execute_supervised(
+        cat, feats, threshold=THRESH, n_dev=N_DEV, max_retries=2,
+        backoff=0.0, injector=FaultInjector(_script()),
+        steal_quantum=QUANTUM,
+        steal_factor=STEAL_FACTOR if steal else None,
+        feedback=EwmaCostModel(N_DEV) if steal else None)
+    assert _pairs(ra, rb) == want, "diverged from the quiet match set"
+    assert rep.coverage == 1.0 and rep.lost_tiles == 0
+    return rep
+
+
+def drill(n: int, r: int):
+    cats, feats = _workload(n, r)
+    rows = []
+    for strat, cat in cats.items():
+        want = _pairs(*execute(cat, feats, threshold=THRESH))
+        reps = {}
+        for mode in ("static", "steal"):
+            with timer() as t:
+                rep = reps[mode] = _run(cat, feats, want, mode == "steal")
+            rows.append({
+                "strategy": strat, "mode": mode, "tiles": cat.num_tiles,
+                "steals": rep.steals, "stolen_tiles": rep.stolen_tiles,
+                "makespan_s": round(rep.measured_makespan_s, 4),
+                "injected_s": round(sum(rec.injected_delay
+                                        for rec in rep.records), 4),
+                "real_s": round(sum(rec.elapsed for rec in rep.records), 4),
+                "wall_s": round(t.seconds, 4),
+                "exact": True,
+            })
+        static, stolen = reps["static"], reps["steal"]
+        assert static.steals == 0
+        assert stolen.steals >= 1, (strat, "no steal ever triggered")
+        win = static.measured_makespan_s / max(stolen.measured_makespan_s,
+                                               1e-12)
+        assert win >= WIN_FLOOR, (strat, win)
+        rows.append({
+            "strategy": strat, "mode": "win", "tiles": cat.num_tiles,
+            "steals": stolen.steals, "stolen_tiles": stolen.stolen_tiles,
+            "makespan_s": round(win, 2), "exact": True,
+        })
+    return rows
+
+
+def run(n: int = 4_000, r: int = 32, quick: bool = False):
+    if quick:
+        n = 1_200
+    rows = drill(n, r)
+    print_table(
+        f"steal_bench — sticky stragglers {list(SLOW_DEVICES)} "
+        f"(+{SLOW_DELAY_S}s/call) over n={n}, s=1.0, n_dev={N_DEV}, "
+        f"quantum={QUANTUM} (mode=win: makespan_s is static/steal ratio)",
+        rows,
+        cols=["strategy", "mode", "tiles", "steals", "stolen_tiles",
+              "makespan_s", "injected_s", "real_s", "exact"])
+    path = save_rows("steal_bench", rows)
+    wins = [row["makespan_s"] for row in rows if row["mode"] == "win"]
+    print(f"\nall strategies exact; makespan wins {wins} "
+          f"(floor {WIN_FLOOR}×) — {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--smoke" in sys.argv)

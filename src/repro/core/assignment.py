@@ -16,7 +16,8 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["greedy_lpt", "greedy_lpt_jnp", "makespan_stats"]
+__all__ = ["greedy_lpt", "greedy_lpt_hetero", "greedy_lpt_jnp",
+           "makespan_stats"]
 
 
 def greedy_lpt(weights: np.ndarray, r: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -34,6 +35,29 @@ def greedy_lpt(weights: np.ndarray, r: int) -> Tuple[np.ndarray, np.ndarray]:
         assignment[t] = k
         loads[k] += w[t]
     return assignment, loads
+
+
+def greedy_lpt_hetero(weights, rates) -> Tuple[np.ndarray, np.ndarray,
+                                               np.ndarray]:
+    """LPT over *heterogeneous* bins: assign each task (largest first) to
+    the bin that would finish it earliest, ``(load_k + w) * rates[k]``.
+
+    ``rates`` are per-bin seconds-per-unit-work (a slow device has a
+    larger rate); with equal rates this degenerates to :func:`greedy_lpt`
+    up to ties. Returns ``(assignment, loads, finish)`` — loads in work
+    units, finish in seconds. Used by the runtime-feedback scheduler to
+    place reducer loads onto EWMA-measured devices.
+    """
+    w = np.asarray(weights, np.float64)
+    rates = np.maximum(np.asarray(rates, np.float64), 1e-300)
+    order = np.argsort(-w, kind="stable")
+    assignment = np.empty(w.shape[0], np.int64)
+    loads = np.zeros(rates.shape[0], np.float64)
+    for t in order:
+        k = int(np.argmin((loads + w[t]) * rates))
+        assignment[t] = k
+        loads[k] += w[t]
+    return assignment, loads, loads * rates
 
 
 def greedy_lpt_jnp(weights, r: int):

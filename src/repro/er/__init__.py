@@ -13,6 +13,7 @@ from .datasets import Dataset, make_products, make_publications  # noqa: F401
 from .encode import encode_titles, ngram_features  # noqa: F401
 from .compiler import (  # noqa: F401
     DeviceKilledError,
+    EwmaCostModel,
     FaultEvent,
     FaultInjector,
     FaultScript,

@@ -30,6 +30,12 @@ completion records, and tile-granular recovery — lost tiles are
 re-scheduled over the shrunken healthy mask with bounded exponential
 backoff, and survivors merge exactly-once at the match-set level.
 
+A sixth closes the loop (`feedback.py`, DESIGN.md §Scheduling): an
+EWMA model of measured seconds-per-live-pair per (device, tile class)
+calibrates `schedule_tiles` and drives mid-stream work stealing in the
+supervisor — slow devices' queued tiles are re-placed onto
+faster-projected peers before the round ends.
+
 `er/executor.py` and `er/distributed.py` keep their historical entry
 points as thin shims over this package.
 """
@@ -59,6 +65,12 @@ from .schedule import (  # noqa: F401
     schedule_tiles,
     tile_costs,
     tiles_for_devices,
+)
+from .feedback import (  # noqa: F401
+    N_TILE_CLASSES,
+    TILE_CLASS_NAMES,
+    EwmaCostModel,
+    tile_class,
 )
 from .faults import (  # noqa: F401
     FAULT_KINDS,

@@ -32,6 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .faults import DeviceKilledError, FaultInjector, TransientScorerError
+from .feedback import N_TILE_CLASSES, EwmaCostModel, tile_class
 from .ir import A_TILE, B_TILE, NCOLS, TileCatalog
 from .lower import pad_tiles
 from .schedule import (NoHealthyDevicesError, Schedule, schedule_tiles,
@@ -270,7 +271,16 @@ class ShardRecord:
     tiles: int
     cost: int                  # live pairs the shard was responsible for
     status: str                # ok | killed | transient | timeout | corrupt
-    elapsed: float             # wall seconds + injected virtual delay
+    elapsed: float             # REAL wall seconds of the shard call
+    injected_delay: float = 0.0  # virtual straggle seconds (injector only)
+
+    @property
+    def busy(self) -> float:
+        """Simulated device-busy seconds: real wall time plus the
+        injected virtual delay. Deadlines, the makespan clock and the
+        feedback model run on busy time; latency *statistics* must use
+        ``elapsed`` so chaos scripts don't poison them."""
+        return self.elapsed + self.injected_delay
 
 
 @dataclass
@@ -281,6 +291,10 @@ class SupervisedReport:
     planned_cost: int = 0      # live pairs the catalog plans
     scored_cost: int = 0       # live pairs covered by accepted shards
     lost_tiles: int = 0        # tiles never scored (degraded mode only)
+    steals: int = 0            # mid-stream re-LPT events (slow devices)
+    stolen_tiles: int = 0      # queued tiles moved off slow devices
+    predicted_makespan_s: float = 0.0  # calibrated round-1 projection
+    measured_makespan_s: float = 0.0   # Σ rounds max device busy-time
     records: List[ShardRecord] = field(default_factory=list)
     backoffs: List[float] = field(default_factory=list)
     healthy: Optional[np.ndarray] = None   # final device mask
@@ -338,7 +352,10 @@ def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
                        deadline: Optional[float] = None,
                        max_retries: int = 3, backoff: float = 0.05,
                        backoff_factor: float = 2.0, sleep=time.sleep,
-                       partial: bool = False
+                       partial: bool = False,
+                       feedback: Optional[EwmaCostModel] = None,
+                       steal_factor: Optional[float] = None,
+                       steal_quantum: Optional[int] = None
                        ) -> Tuple[np.ndarray, np.ndarray, SupervisedReport]:
     """Stage 1 with tile-granular fault recovery over logical devices.
 
@@ -352,7 +369,22 @@ def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
     where the failure indicates device loss (kill/timeout), and ONLY the
     lost tiles are re-scheduled over the shrunken healthy mask — at most
     ``max_retries`` extra rounds with exponential backoff
-    (``backoff * backoff_factor**k``).
+    (``backoff * backoff_factor**k``, each sleep clamped to the
+    remaining wall ``deadline``).
+
+    **Runtime feedback.** Pass ``feedback=`` (an :class:`EwmaCostModel`)
+    and every accepted shard call trains the model, and every round's
+    ``schedule_tiles`` is calibrated by it (wall-clock-weighted tile
+    packing, heterogeneous device placement). Pass ``steal_factor=`` to
+    enable mid-stream work stealing: each device's round work is split
+    into ``steal_quantum``-tile batches (one batch per device when
+    unset), dispatch follows per-device virtual busy-time clocks (the
+    idle-device-next simulation of a parallel fleet), and after every
+    completed call a device whose projected finish exceeds
+    ``steal_factor ×`` the fleet's median projection has its *queued*
+    (never in-flight) batches re-placed greedily onto the
+    fastest-projected other devices. Stolen tiles were not yet scored,
+    so exactly-once merging is untouched.
 
     Survivors merge idempotently: the catalog covers each planned pair
     exactly once and results from failed shards are never merged, so
@@ -373,7 +405,10 @@ def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
     if healthy is None:
         healthy = np.ones(n_dev, bool)
     healthy = np.asarray(healthy, bool).copy()
+    if steal_factor is not None and feedback is None:
+        feedback = EwmaCostModel(n_dev)
     costs = tile_costs(catalog)
+    classes = tile_class(catalog) if feedback is not None else None
     report = SupervisedReport(planned_cost=int(costs.sum()), healthy=healthy)
     out_a: List[np.ndarray] = [np.zeros(0, np.int64)]
     out_b: List[np.ndarray] = [np.zeros(0, np.int64)]
@@ -384,39 +419,95 @@ def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
         return (deadline is not None
                 and time.perf_counter() - t_start >= deadline)
 
+    def _predict(dev: int, batch: np.ndarray) -> float:
+        return feedback.predict_tiles(dev, costs[batch], classes[batch])
+
+    def _steal_pass(queues, clocks) -> None:
+        """Re-place every queued batch of over-projected devices onto the
+        fastest-projected peers (greedy, largest batch first)."""
+        proj = {}
+        for k in clocks:
+            proj[k] = clocks[k] + sum(_predict(k, b)
+                                      for b in queues.get(k, ()))
+        med = float(np.median(list(proj.values())))
+        victims = [k for k in list(queues)
+                   if proj[k] > steal_factor * max(med, 1e-9)]
+        for v in victims:
+            if len(clocks) < 2:
+                return
+            batches = queues.pop(v)
+            report.steals += 1
+            proj[v] = clocks[v]
+            batches.sort(key=lambda b: -float(costs[b].sum()))
+            for b in batches:
+                dst = min((k for k in clocks if k != v),
+                          key=lambda k: (proj[k] + _predict(k, b), k))
+                queues.setdefault(dst, []).append(b)
+                proj[dst] += _predict(dst, b)
+                report.stolen_tiles += int(b.size)
+
     while pending.size:
         if report.rounds > max_retries or _out_of_time():
             break
         if report.rounds:                       # retry round: back off
             b = backoff * backoff_factor ** (report.rounds - 1)
+            if deadline is not None:            # never sleep past deadline
+                b = min(b, max(deadline - (time.perf_counter() - t_start),
+                               0.0))
             report.backoffs.append(b)
             if b > 0:
                 sleep(b)
+            if _out_of_time():                  # re-check: sleep spent it
+                break
         report.rounds += 1
         sub = _sub_catalog(catalog, pending)
         try:
             sched = schedule_tiles(sub, n_dev=n_dev, healthy=healthy,
-                                   policy=policy)
+                                   policy=policy, feedback=feedback)
         except NoHealthyDevicesError:
             if partial:
                 break
             report.lost_tiles = int(pending.size)
             raise
+        if report.rounds == 1 and sched.calibrated:
+            report.predicted_makespan_s = float(np.max(sched.predicted_s))
         dev_of_tile = sched.reducer_device[sched.tile_reducer]
         lost: List[np.ndarray] = []
+        # Per-device FIFO queues of quantum-sized batches plus virtual
+        # busy-time clocks; dispatching to the min-clock device (lowest
+        # id on ties) simulates a parallel fleet — with one batch per
+        # device and zeroed clocks it reproduces the classic ascending-
+        # device-order call sequence exactly.
+        queues: dict = {}
+        clocks: dict = {}
         for d in np.flatnonzero(healthy):
+            d = int(d)
+            clocks[d] = 0.0
             mine = pending[dev_of_tile == d]
             if mine.size == 0:
                 continue
+            if steal_quantum:
+                queues[d] = [mine[lo:lo + steal_quantum]
+                             for lo in range(0, mine.size, steal_quantum)]
+            else:
+                queues[d] = [mine]
+        round_makespan = 0.0
+        while queues:
             if _out_of_time():
-                lost.append(mine)
-                continue
+                for q in queues.values():
+                    lost.extend(q)
+                queues.clear()
+                break
+            d = min(queues, key=lambda k: (clocks[k], k))
+            mine = queues[d].pop(0)
+            if not queues[d]:
+                del queues[d]
             cost = int(costs[mine].sum())
             t0 = time.perf_counter()
             status, extra = "ok", 0.0
             ra = rb = None
             try:
-                plan = injector.shard_call(int(d)) if injector else None
+                plan = injector.shard_call(d) if injector else None
                 ra, rb = score_catalog(
                     feats_a, _sub_catalog(catalog, mine), feats_b,
                     threshold=threshold, impl=impl,
@@ -429,25 +520,40 @@ def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
                 status = "killed"
             except TransientScorerError:
                 status = "transient"
-            elapsed = time.perf_counter() - t0 + extra
+            elapsed = time.perf_counter() - t0
+            busy = elapsed + extra
             if status == "ok":
-                if shard_deadline is not None and elapsed > shard_deadline:
+                if shard_deadline is not None and busy > shard_deadline:
                     status = "timeout"          # straggler: discard output
                 elif not shard_sane(ra, rb, n_a, n_b):
                     status = "corrupt"          # failed the sanity check
             report.records.append(ShardRecord(
-                round=report.rounds, device=int(d), tiles=int(mine.size),
-                cost=cost, status=status, elapsed=elapsed))
+                round=report.rounds, device=d, tiles=int(mine.size),
+                cost=cost, status=status, elapsed=elapsed,
+                injected_delay=extra))
+            clocks[d] += busy
+            round_makespan = max(round_makespan, clocks[d])
             if status == "ok":
                 out_a.append(ra)
                 out_b.append(rb)
                 report.scored_cost += cost
                 if report.rounds > 1:
                     report.recovered_tiles += int(mine.size)
+                if feedback is not None and cost > 0:
+                    feedback.observe(
+                        d, np.bincount(classes[mine], weights=costs[mine],
+                                       minlength=N_TILE_CLASSES), busy)
             else:
                 lost.append(mine)
                 if status in ("killed", "timeout"):
                     healthy[d] = False          # device-level failure
+                    lost.extend(queues.pop(d, []))
+                    clocks.pop(d, None)
+            if (steal_factor is not None and feedback is not None
+                    and feedback.observations >= 1
+                    and queues and len(clocks) > 1):
+                _steal_pass(queues, clocks)
+        report.measured_makespan_s += round_makespan
         pending = (np.concatenate(lost) if lost
                    else np.zeros(0, np.int64))
 

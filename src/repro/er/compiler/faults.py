@@ -18,7 +18,11 @@ failure taxonomy (DESIGN.md §Fault tolerance):
                     extra virtual seconds; the supervisor treats a call
                     whose (wall + injected) latency exceeds the shard
                     deadline as timed out and DISCARDS its output.
-                    Models a slow disk / noisy neighbor.
+                    Models a slow disk / noisy neighbor. With
+                    ``sticky=True`` the delay applies to EVERY call on
+                    the device from its step on (a persistently slow
+                    node — the work-stealing drill's straggler) until a
+                    ``revive`` clears it.
   * ``transient`` — ONE shard call raises
                     :class:`TransientScorerError`; the device stays
                     healthy (retry-able). Models an RPC blip.
@@ -67,6 +71,7 @@ class FaultEvent:
     device: int
     step: int               # arms once the injector has served >= step calls
     delay: float = 0.0      # straggle: virtual seconds added to the call
+    sticky: bool = False    # straggle: delay EVERY call until revived
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -150,6 +155,7 @@ class FaultInjector:
         self._pending = sorted(script.events, key=lambda e: e.step)
         self._dead: Set[int] = set()
         self._straggle: Dict[int, List[float]] = {}
+        self._slow: Dict[int, float] = {}
         self._transient: Dict[int, int] = {}
         self._corrupt: Dict[int, int] = {}
         self._rng = np.random.default_rng(seed)
@@ -163,8 +169,12 @@ class FaultInjector:
                 self._dead.add(e.device)
             elif e.kind == "revive":
                 self._dead.discard(e.device)
+                self._slow.pop(e.device, None)
             elif e.kind == "straggle":
-                self._straggle.setdefault(e.device, []).append(e.delay)
+                if e.sticky:
+                    self._slow[e.device] = e.delay
+                else:
+                    self._straggle.setdefault(e.device, []).append(e.delay)
             elif e.kind == "transient":
                 self._transient[e.device] = \
                     self._transient.get(e.device, 0) + 1
@@ -181,9 +191,10 @@ class FaultInjector:
             self._transient[device] -= 1
             raise TransientScorerError(f"device {device}: transient fault")
         plan = CallPlan()
+        plan.delay = self._slow.get(device, 0.0)
         q = self._straggle.get(device)
         if q:
-            plan.delay = q.pop(0)
+            plan.delay += q.pop(0)
         if self._corrupt.get(device, 0) > 0:
             self._corrupt[device] -= 1
             plan.corrupt = True
@@ -214,3 +225,8 @@ class FaultInjector:
     def dead_devices(self) -> Set[int]:
         """Devices currently down (ground truth, for drills/benchmarks)."""
         return set(self._dead)
+
+    @property
+    def slow_devices(self) -> Dict[int, float]:
+        """Devices with a sticky straggle armed: device → per-call delay."""
+        return dict(self._slow)

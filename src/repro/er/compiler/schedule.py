@@ -24,7 +24,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from ...core.assignment import greedy_lpt, makespan_stats
+from ...core.assignment import greedy_lpt, greedy_lpt_hetero, makespan_stats
 from .ir import (A_TILE, B_TILE, R0, R1, C0, C1, TRI, LB_R, LB_C, UB_R,
                  UB_C, BAND, RED, NCOLS, TileCatalog)
 
@@ -94,20 +94,36 @@ class Schedule:
     reducer_load: np.ndarray    # (r,) live pairs per reduce task
     device_load: np.ndarray     # (n_dev,) live pairs per device
     healthy: np.ndarray         # (n_dev,) bool
+    # Runtime-feedback calibration (None without an EwmaCostModel):
+    device_rate: Optional[np.ndarray] = None  # (n_dev,) s per live pair
+    predicted_s: Optional[np.ndarray] = None  # (n_dev,) projected seconds
 
     @property
     def n_dev(self) -> int:
         return int(self.device_load.shape[0])
 
+    @property
+    def calibrated(self) -> bool:
+        return self.predicted_s is not None
+
     def stats(self) -> Dict:
-        """The paper's balance metrics at both scheduling levels."""
-        return {
+        """The paper's balance metrics at both scheduling levels, plus —
+        when the schedule was EWMA-calibrated — the wall-clock makespan
+        the feedback model projects (compare against the supervisor's
+        ``SupervisedReport.measured_makespan_s``)."""
+        out = {
             "policy": self.policy,
             "tiles": int(self.tile_cost.shape[0]),
             "total_cost": int(self.tile_cost.sum()),
             "reducer": makespan_stats(self.reducer_load),
             "device": makespan_stats(self.device_load[self.healthy]),
+            "calibrated": self.calibrated,
         }
+        if self.predicted_s is not None:
+            alive = self.predicted_s[self.healthy]
+            out["predicted_makespan_s"] = (float(alive.max())
+                                           if alive.size else 0.0)
+        return out
 
 
 def device_assignment(r: int, n_dev: int,
@@ -127,7 +143,8 @@ def device_assignment(r: int, n_dev: int,
 
 def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
                    healthy: Optional[np.ndarray] = None,
-                   policy: str = "cost_lpt") -> Schedule:
+                   policy: str = "cost_lpt",
+                   feedback=None) -> Schedule:
     """Assign tiles → reducers → devices.
 
     ``policy="cost_lpt"``: greedy LPT over exact tile costs fills the r
@@ -137,6 +154,16 @@ def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
     ``policy="round_robin"``: keep the plan's reducer attribution and
     route reducers → devices round-robin (the pre-scheduler behavior,
     kept as the benchmark baseline).
+
+    ``feedback=`` an :class:`~.feedback.EwmaCostModel` with at least one
+    observation turns the cost-LPT placement into a *calibrated* one:
+    tile weights become exact live pairs × the measured per-tile-class
+    rate (the multiplicative calibration — the exact pair counts still
+    back every coverage metric), and reducer loads land on devices via
+    finish-time LPT over the measured per-device rates
+    (:func:`core.assignment.greedy_lpt_hetero`), so a slow device gets
+    proportionally less work. The projection lands on
+    ``Schedule.predicted_s`` / ``stats()["predicted_makespan_s"]``.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown schedule policy {policy!r}")
@@ -148,7 +175,27 @@ def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
         raise NoHealthyDevicesError("no healthy devices")
     r = catalog.r
     costs = tile_costs(catalog)
-    if policy == "cost_lpt":
+    device_rate = predicted_s = None
+    calibrate = (feedback is not None and policy == "cost_lpt"
+                 and feedback.observations > 0)
+    if calibrate:
+        from .feedback import tile_class
+        sec = costs * feedback.class_rates()[tile_class(catalog)]
+        # greedy_lpt weighs int64: scale predicted seconds to ~ns so the
+        # exact-cost tie-breaking order is preserved at any magnitude.
+        scale = 2.0 ** 40 / max(float(sec.max()), 1e-30) if sec.size else 1.0
+        tile_reducer, _ = greedy_lpt(
+            np.round(sec * scale).astype(np.int64), r)
+        reducer_sec = np.bincount(tile_reducer, weights=sec, minlength=r)
+        device_rate = feedback.device_rates()
+        rel = device_rate / max(feedback.global_rate, 1e-300)
+        on_alive, _, finish = greedy_lpt_hetero(reducer_sec, rel[alive])
+        reducer_device = alive[on_alive]
+        predicted_s = np.zeros(n_dev)
+        predicted_s[alive] = finish
+        reducer_load = np.bincount(
+            tile_reducer, weights=costs, minlength=r).astype(np.int64)
+    elif policy == "cost_lpt":
         tile_reducer, reducer_load = greedy_lpt(costs, r)
         on_alive, _ = greedy_lpt(reducer_load, alive.size)
         reducer_device = alive[on_alive]
@@ -162,7 +209,8 @@ def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
     return Schedule(policy=policy, tile_cost=costs,
                     tile_reducer=tile_reducer, reducer_device=reducer_device,
                     reducer_load=reducer_load, device_load=device_load,
-                    healthy=healthy)
+                    healthy=healthy, device_rate=device_rate,
+                    predicted_s=predicted_s)
 
 
 def apply_schedule(catalog: TileCatalog, schedule: Schedule) -> TileCatalog:

@@ -104,6 +104,9 @@ class ERConfig:
     max_retries: int = 3               # recovery rounds per supervised job
     shard_deadline_s: Optional[float] = None   # straggler cutoff per shard
     backoff_s: float = 0.0             # base retry backoff (exponential)
+    # ---- runtime feedback (supervised catalog executor only) ----
+    steal_factor: Optional[float] = None   # > 0: mid-stream work stealing
+    steal_quantum: Optional[int] = None    # tiles per dispatch batch
 
 
 @dataclass
@@ -121,6 +124,8 @@ class ERResult:
     attempts: int = 1                  # supervisor rounds (1 == quiet run)
     recovered_tiles: int = 0           # tiles re-executed after a failure
     coverage: float = 1.0              # live pairs scored / planned
+    steals: int = 0                    # work-stealing events (supervised)
+    measured_makespan_s: float = 0.0   # supervisor busy-time makespan
 
     @property
     def makespan_seconds(self) -> float:
@@ -211,7 +216,7 @@ def _reference_reducer_rows(plan, r: int) -> List[Tuple[np.ndarray, np.ndarray]]
 
 def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
            block_ids: Optional[np.ndarray] = None,
-           fault_injector=None) -> ERResult:
+           fault_injector=None, feedback=None) -> ERResult:
     """Match a single source. ``block_ids`` overrides prefix blocking (used
     by the Fig. 9 skew study; ignored by ``strategy="sorted_neighborhood"``,
     which partitions a sliding window over the sort order, not blocks).
@@ -227,6 +232,12 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     recovery did. The recovery invariant — the match set equals the
     failure-free run for any injected failure sequence — is the
     supervisor's headline contract (DESIGN.md §Fault tolerance).
+
+    ``feedback`` (an ``EwmaCostModel``, supervised runs only) calibrates
+    every supervised schedule by measured shard latency and enables
+    ``cfg.steal_factor`` work stealing; pass the same model across calls
+    to keep its calibration. With ``cfg.steal_factor`` set and no model
+    given, a fresh one is created for the run.
     """
     n = len(titles)
     cfg = config if config is not None else ERConfig()
@@ -235,6 +246,9 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     supervised = cfg.supervised_devices > 0 or fault_injector is not None
     if supervised and cfg.executor != "catalog":
         raise ValueError("supervised execution requires executor='catalog'")
+    if supervised and feedback is None and cfg.steal_factor is not None:
+        from .compiler import EwmaCostModel
+        feedback = EwmaCostModel(max(cfg.supervised_devices, 1))
 
     # ---- featurize once (shared by both jobs) ----
     codes, lens, feats = featurize(titles, cfg)
@@ -307,22 +321,28 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     sched_report: Optional[Dict] = None
     attempts, recovered_tiles = 1, 0
     planned_cost, scored_cost = 0, 0
+    steals, measured_makespan = 0, 0.0
 
     def _supervised_stage1(catalog, feats_a, feats_b=None):
         """Stage 1 through the fault-tolerant supervisor; folds the
         report into the run-level recovery accounting."""
-        nonlocal attempts, recovered_tiles, planned_cost, scored_cost
+        nonlocal attempts, recovered_tiles, planned_cost, scored_cost, \
+            steals, measured_makespan
         ca, cb, rep = execute_supervised(
             catalog, feats_a, feats_b,
             threshold=cfg.threshold - cfg.filter_margin,
             n_dev=max(cfg.supervised_devices, 1), impl=cfg.kernel_impl,
             policy=cfg.schedule_policy, injector=fault_injector,
             shard_deadline=cfg.shard_deadline_s,
-            max_retries=cfg.max_retries, backoff=cfg.backoff_s)
+            max_retries=cfg.max_retries, backoff=cfg.backoff_s,
+            feedback=feedback, steal_factor=cfg.steal_factor,
+            steal_quantum=cfg.steal_quantum)
         attempts = max(attempts, rep.rounds)
         recovered_tiles += rep.recovered_tiles
         planned_cost += rep.planned_cost
         scored_cost += rep.scored_cost
+        steals += rep.steals
+        measured_makespan += rep.measured_makespan_s
         return ca, cb
 
     if cfg.executor == "catalog":
@@ -416,4 +436,6 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
         attempts=attempts,
         recovered_tiles=recovered_tiles,
         coverage=(scored_cost / planned_cost if planned_cost else 1.0),
+        steals=steals,
+        measured_makespan_s=measured_makespan,
     )

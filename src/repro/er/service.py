@@ -55,11 +55,11 @@ from ..core import blocked_layout, compute_bdm, entity_indices, update_bdm
 from ..core.two_source import (TwoSourceBDM, plan_block_split_2src,
                                plan_pair_range_2src)
 from .blocking import prefix_key
-from .compiler import (DeviceKilledError, NoHealthyDevicesError,
-                       RecoveryFailedError, SupervisedReport,
-                       TransientScorerError, cross_job, execute,
-                       execute_supervised, lower, make_scorer, pad_catalog,
-                       plan_to_job, schedule_tiles, verify_pairs)
+from .compiler import (DeviceKilledError, EwmaCostModel,
+                       NoHealthyDevicesError, RecoveryFailedError,
+                       SupervisedReport, TransientScorerError, cross_job,
+                       execute, execute_supervised, lower, make_scorer,
+                       pad_catalog, plan_to_job, schedule_tiles, verify_pairs)
 from .compiler.execute import _resolve_impl
 from .compiler.faults import FaultInjector
 from .pipeline import featurize
@@ -141,10 +141,12 @@ class ServiceUnavailable(RuntimeError):
     """Clean service-level failure: every execution device is evicted
     (circuit breaker open) or died mid-request. Carries retry-after
     semantics — clients should back off ``retry_after_s`` seconds, by
-    which time a breaker cooldown will have elapsed and the next request
-    will probe the evicted devices."""
+    which time EVERY breaker cooldown will have elapsed and the next
+    request will probe (and can re-admit) all evicted devices. Always
+    computed from the live breaker state — there is deliberately no
+    default, so no raise site can fall back to a made-up constant."""
 
-    def __init__(self, msg: str, retry_after_s: float = 1.0):
+    def __init__(self, msg: str, retry_after_s: float):
         super().__init__(msg)
         self.retry_after_s = float(retry_after_s)
 
@@ -163,6 +165,8 @@ class MatchResponse(set):
         self.degraded = False      # True iff coverage < 1.0
         self.planned_cost = 0      # live pairs planned across jobs
         self.scored_cost = 0       # live pairs actually scored
+        self.steals = 0            # work-stealing events across the jobs
+        self.stolen_tiles = 0      # queued tiles moved off slow devices
 
     @property
     def coverage(self) -> float:
@@ -177,6 +181,8 @@ class MatchResponse(set):
         self.recovered_tiles += report.recovered_tiles
         self.planned_cost += report.planned_cost
         self.scored_cost += report.scored_cost
+        self.steals += report.steals
+        self.stolen_tiles += report.stolen_tiles
         if report.lost_tiles:
             self.degraded = True
 
@@ -210,6 +216,11 @@ class ServiceConfig:
     partial_results: bool = True          # degrade instead of failing
     breaker_threshold: int = 3            # consecutive failures → evict
     breaker_cooldown_s: float = 0.5       # probe an evicted device after this
+    # ---- runtime feedback (DESIGN.md §Scheduling feedback loop) ----
+    feedback_scheduling: bool = False     # EWMA-calibrate schedule_tiles
+    steal_factor: Optional[float] = None  # > 0: mid-stream work stealing
+    steal_quantum: Optional[int] = None   # tiles per dispatch batch
+    feedback_alpha: float = 0.35          # EWMA smoothing factor
 
 
 class ERService:
@@ -235,6 +246,13 @@ class ERService:
                 "supervised execution (exec_devices > 0) drives logical "
                 "device shards host-side; it composes with mesh=None only")
         self._n_exec = max(cfg.exec_devices, 1)
+        # ONE EWMA model for the service's lifetime: steady-state serving
+        # self-tunes — every request's shard timings calibrate the next
+        # request's schedule.
+        self.feedback: Optional[EwmaCostModel] = (
+            EwmaCostModel(self._n_exec, alpha=cfg.feedback_alpha)
+            if cfg.feedback_scheduling or cfg.steal_factor is not None
+            else None)
         self.fault_injector: Optional[FaultInjector] = None
         self._fail_streak = np.zeros(self._n_exec, np.int64)
         self._breaker_open: Dict[int, float] = {}   # device → eviction time
@@ -285,7 +303,8 @@ class ERService:
                             "bucket_hits": {b: 0 for b in self._buckets},
                             "retries": 0, "recovered_tiles": 0,
                             "degraded": 0, "breaker_evictions": 0,
-                            "breaker_readmissions": 0}
+                            "breaker_readmissions": 0,
+                            "steals": 0, "stolen_tiles": 0}
 
         self._dist_scorer = None
         if mesh is not None:
@@ -445,13 +464,17 @@ class ERService:
                     self.stats["breaker_evictions"] += 1
 
     def _retry_after(self) -> float:
-        """Seconds until the earliest evicted device becomes probeable."""
+        """Seconds until the LAST evicted device becomes probeable — a
+        client that waits this long is guaranteed the next request
+        probes every evicted device, instead of racing the longest
+        cooldown and landing back here. Clamped to the cooldown span
+        (the remaining time can never legitimately exceed it)."""
         if not self._breaker_open:
             return max(self.cfg.backoff_s, 1e-3)
         now = time.monotonic()
-        rem = min(self.cfg.breaker_cooldown_s - (now - t)
+        rem = max(self.cfg.breaker_cooldown_s - (now - t)
                   for t in self._breaker_open.values())
-        return max(rem, 1e-3)
+        return min(max(rem, 1e-3), max(self.cfg.breaker_cooldown_s, 1e-3))
 
     def _score_supervised(self, feats_a, catalog, q_buf: np.ndarray):
         """Stage 1 through the fault-tolerant supervisor on
@@ -477,7 +500,9 @@ class ERService:
                 shard_deadline=cfg.shard_deadline_s, deadline=remaining,
                 max_retries=cfg.max_retries, backoff=cfg.backoff_s,
                 backoff_factor=cfg.backoff_factor,
-                partial=cfg.partial_results)
+                partial=cfg.partial_results, feedback=self.feedback,
+                steal_factor=cfg.steal_factor,
+                steal_quantum=cfg.steal_quantum)
         except NoHealthyDevicesError as e:
             # Only reachable with partial_results=False: every device
             # died mid-job. Surface retry-after instead of a traceback.
@@ -526,6 +551,8 @@ class ERService:
                 out.recovered_tiles += part.recovered_tiles
                 out.planned_cost += part.planned_cost
                 out.scored_cost += part.scored_cost
+                out.steals += part.steals
+                out.stolen_tiles += part.stolen_tiles
                 out.degraded = out.degraded or part.degraded
             return out
 
@@ -611,6 +638,8 @@ class ERService:
             s["retries"] += max(matches.attempts - 1, 0)
             s["recovered_tiles"] += matches.recovered_tiles
             s["degraded"] += int(matches.degraded)
+            s["steals"] += matches.steals
+            s["stolen_tiles"] += matches.stolen_tiles
         return matches
 
     def warmup(self) -> int:

@@ -1,0 +1,313 @@
+"""Runtime-feedback scheduling: the EWMA cost model, calibrated
+schedules, mid-stream work stealing — and the three supervisor timing
+bugfixes that shipped with them.
+
+Contracts under test (DESIGN.md §Scheduling feedback loop):
+
+  * the EWMA model learns per-device seconds-per-live-pair from shard
+    records and falls back (device, class) → device → global;
+  * calibration re-weights *placement only* — a calibrated schedule
+    preserves exact pair coverage/disjointness, and supervised execution
+    with feedback + stealing returns exactly the quiet match set;
+  * under a seeded sticky straggler the stolen-tile makespan beats the
+    static schedule by a wide margin;
+  * regressions: backoff sleeps are clamped to the remaining request
+    deadline, chaos latency is split real-vs-injected on the records,
+    and ``ServiceUnavailable.retry_after_s`` tracks the live breaker
+    cooldown instead of a constant.
+
+The hypothesis leg of the calibrated-schedule invariant lives with the
+other schedule properties (``test_schedule_properties.py``); the
+deterministic seed sweep here runs without the optional dep.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.er import (ERService, ServiceConfig, ServiceUnavailable,
+                      make_products)
+from repro.er.compiler import (EwmaCostModel, N_TILE_CLASSES, FaultEvent,
+                               FaultInjector, FaultScript, apply_schedule,
+                               cross_job, execute, execute_supervised, lower,
+                               plan_to_job, schedule_tiles, tile_class)
+from repro.core import (plan_basic, plan_pair_range,
+                        plan_sorted_neighborhood, compute_bdm)
+
+from test_compiler_schedule import pair_multiset
+
+BM = BN = 32
+THRESH = 0.4
+
+
+def _feats(n: int, seed: int, dim: int = 32) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=(n, dim)).astype(np.float32)
+    return f / np.linalg.norm(f, axis=1, keepdims=True)
+
+
+def _catalog(strategy: str, sizes, r: int):
+    sizes = np.asarray(sizes, np.int64)
+    n = int(sizes.sum())
+    if strategy == "sorted_neighborhood":
+        plan = plan_sorted_neighborhood(n, w=5, r=r)
+    else:
+        bdm = compute_bdm(np.repeat(np.arange(sizes.size), sizes),
+                          np.zeros(n, np.int64), sizes.size, 1)
+        plan = {"basic": plan_basic,
+                "pair_range": plan_pair_range}[strategy](bdm, r)
+    return lower(plan_to_job(plan), BM, BN), n
+
+
+def _pairs(ra, rb):
+    return set(zip(ra.tolist(), rb.tolist()))
+
+
+def _quiet(catalog, feats, feats_b=None):
+    return _pairs(*execute(catalog, feats, feats_b, threshold=THRESH))
+
+
+# ---------------------------------------------------------------------------
+# EWMA cost model
+# ---------------------------------------------------------------------------
+
+def test_tile_class_partitions_by_predicate_shape():
+    sn, _ = _catalog("sorted_neighborhood", [40] * 3, r=4)
+    assert (tile_class(sn) == 2).any()            # SN band tiles
+    basic, _ = _catalog("basic", [80, 30], r=4)
+    assert (tile_class(basic) == 1).any()         # self-join triangles
+    cross = lower(cross_job(70, 20, 4), BM, BN)
+    assert (tile_class(cross) == 0).all()         # plain rectangles
+    for cat in (sn, basic, cross):
+        cls = tile_class(cat)
+        assert cls.shape == (cat.num_tiles,)
+        assert ((cls >= 0) & (cls < N_TILE_CLASSES)).all()
+
+
+def test_ewma_learns_device_rates_and_predicts():
+    fb = EwmaCostModel(3, alpha=0.5)
+    even = np.zeros(N_TILE_CLASSES)
+    even[0] = 1000.0
+    for _ in range(6):
+        fb.observe(0, even, seconds=1e-3)         # 1e-6 s/pair: fast
+        fb.observe(1, even, seconds=5e-3)         # 5e-6 s/pair: slow
+    rates = fb.device_rates()
+    assert rates[0] == pytest.approx(1e-6, rel=1e-6)
+    assert rates[1] == pytest.approx(5e-6, rel=1e-6)
+    # unseen device 2 falls back to the global blend, between the two
+    assert rates[0] < rates[2] < rates[1]
+    # prediction scales linearly in cost and respects device speed
+    assert fb.predict(1, even) == pytest.approx(5 * fb.predict(0, even))
+    assert fb.predict(0, 2 * even) == pytest.approx(2 * fb.predict(0, even))
+
+
+def test_ewma_resolution_fallback_class_then_device_then_global():
+    fb = EwmaCostModel(2)
+    only_band = np.zeros(N_TILE_CLASSES)
+    only_band[2] = 500.0
+    fb.observe(0, only_band, seconds=1e-3)
+    assert fb.rate(0, 2) == pytest.approx(2e-6)   # observed (dev, class)
+    assert fb.rate(0, 1) == pytest.approx(2e-6)   # class unseen → device
+    assert fb.rate(1) == fb.global_rate           # device unseen → global
+    assert fb.observations == 1
+
+
+def test_ewma_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        EwmaCostModel(0)
+    with pytest.raises(ValueError):
+        EwmaCostModel(2, alpha=0.0)
+    fb = EwmaCostModel(2)
+    with pytest.raises(ValueError):
+        fb.observe(0, np.zeros(N_TILE_CLASSES + 1), 1.0)
+    fb.observe(0, np.zeros(N_TILE_CLASSES), 1.0)  # zero cost: no-op
+    assert fb.observations == 0
+
+
+# ---------------------------------------------------------------------------
+# Calibrated schedules preserve the compiler's invariants
+# ---------------------------------------------------------------------------
+
+def _trained_model(n_dev: int, seed: int) -> EwmaCostModel:
+    rng = np.random.default_rng(seed)
+    fb = EwmaCostModel(n_dev)
+    for _ in range(int(rng.integers(1, 12))):
+        cost = rng.integers(0, 2000, N_TILE_CLASSES).astype(np.float64)
+        fb.observe(int(rng.integers(0, n_dev)), cost,
+                   seconds=float(rng.uniform(1e-4, 1e-1)))
+    return fb
+
+
+def check_calibrated_schedule_preserves_coverage(cat, n_dev, seed):
+    """Calibration re-weights placement, never pairs: coverage and
+    disjointness survive, loads stay exact live-pair counts. Shared by
+    the deterministic sweep here and the hypothesis leg in
+    ``test_schedule_properties.py``."""
+    fb = _trained_model(n_dev, seed)
+    sched = schedule_tiles(cat, n_dev=n_dev, feedback=fb)
+    assert pair_multiset(apply_schedule(cat, sched)) == pair_multiset(cat)
+    assert int(sched.reducer_load.sum()) == cat.total_pairs
+    assert int(sched.device_load.sum()) == cat.total_pairs
+    if fb.observations and cat.num_tiles:
+        assert sched.calibrated
+        stats = sched.stats()
+        assert stats["calibrated"]
+        assert stats["predicted_makespan_s"] >= 0.0
+
+
+def test_calibrated_schedule_preserves_coverage_sweep():
+    rng = np.random.default_rng(42)
+    for seed in range(12):
+        strategy = ["basic", "pair_range", "sorted_neighborhood"][seed % 3]
+        sizes = rng.integers(1, 60, size=int(rng.integers(1, 6)))
+        cat, _ = _catalog(strategy, sizes, r=int(rng.integers(1, 7)))
+        check_calibrated_schedule_preserves_coverage(
+            cat, n_dev=int(rng.integers(1, 6)), seed=seed)
+    cross = lower(cross_job(77, 23, 5), BM, BN)
+    check_calibrated_schedule_preserves_coverage(cross, n_dev=3, seed=99)
+
+
+def test_calibrated_supervised_matches_uncalibrated_exactly():
+    cat, n = _catalog("pair_range", [90, 40, 12, 3], r=8)
+    f = _feats(n, 7)
+    want = _quiet(cat, f)
+    fb = _trained_model(4, seed=11)
+    ra, rb, rep = execute_supervised(cat, f, threshold=THRESH, n_dev=4,
+                                     feedback=fb, steal_factor=2.0,
+                                     steal_quantum=2)
+    assert _pairs(ra, rb) == want
+    assert rep.coverage == 1.0
+    assert rep.predicted_makespan_s > 0.0       # trained model: calibrated
+    assert rep.measured_makespan_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# The straggler drill: stealing beats the static schedule
+# ---------------------------------------------------------------------------
+
+def test_steal_beats_static_under_sticky_straggler():
+    cat, n = _catalog("pair_range", [120, 60, 30, 14, 6], r=16)
+    f = _feats(n, 5)
+    want = _quiet(cat, f)
+    script = FaultScript(events=(
+        FaultEvent("straggle", 1, 0, delay=0.25, sticky=True),), n_dev=4)
+
+    def run(steal_factor):
+        ra, rb, rep = execute_supervised(
+            cat, f, threshold=THRESH, n_dev=4, max_retries=2, backoff=0.0,
+            injector=FaultInjector(script), steal_quantum=4,
+            steal_factor=steal_factor,
+            feedback=EwmaCostModel(4) if steal_factor else None)
+        assert _pairs(ra, rb) == want           # exact quiet match set
+        assert rep.coverage == 1.0
+        return rep
+
+    static = run(None)
+    stolen = run(2.0)
+    assert static.steals == 0 and static.stolen_tiles == 0
+    assert stolen.steals >= 1 and stolen.stolen_tiles > 0
+    # same dispatch quantum on both sides: the win is pure re-placement
+    assert static.measured_makespan_s >= 1.5 * stolen.measured_makespan_s
+
+
+def test_sticky_straggle_cleared_by_revive():
+    inj = FaultInjector(FaultScript(events=(
+        FaultEvent("straggle", 0, 0, delay=3.0, sticky=True),
+        FaultEvent("revive", 0, 3)), n_dev=2))
+    assert inj.shard_call(0).delay == 3.0       # step 1: slow
+    assert inj.shard_call(0).delay == 3.0       # step 2: still slow
+    assert inj.slow_devices == {0: 3.0}
+    assert inj.shard_call(0).delay == 0.0       # step 3: revived
+    assert inj.slow_devices == {}
+
+
+# ---------------------------------------------------------------------------
+# Regression: backoff sleeps never overshoot the request deadline
+# ---------------------------------------------------------------------------
+
+def test_backoff_sleep_clamped_to_remaining_deadline():
+    cat, n = _catalog("pair_range", [70, 30], r=4)
+    f = _feats(n, 4)
+    script = FaultScript(events=tuple(
+        FaultEvent("transient", 0, s) for s in range(0, 12)), n_dev=2)
+    slept = []
+    deadline = 30.0
+    execute_supervised(cat, f, threshold=THRESH, n_dev=2, max_retries=3,
+                       backoff=100.0, deadline=deadline, sleep=slept.append,
+                       partial=True, injector=FaultInjector(script))
+    assert slept                                # retries did back off …
+    assert all(s <= deadline for s in slept)    # … but never past the
+    assert max(slept) < 100.0                   #     deadline (was 100s+)
+
+
+def test_zero_deadline_sleeps_zero_and_degrades():
+    cat, n = _catalog("pair_range", [70, 30], r=4)
+    f = _feats(n, 4)
+    slept = []
+    ra, rb, rep = execute_supervised(
+        cat, f, threshold=THRESH, n_dev=2, backoff=50.0, deadline=0.0,
+        sleep=slept.append, partial=True)
+    assert slept == [] and ra.size == 0 and rep.coverage == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Regression: records split real wall time from injected virtual delay
+# ---------------------------------------------------------------------------
+
+def test_latency_stats_exclude_virtual_delay():
+    cat, n = _catalog("pair_range", [80, 25], r=4)
+    f = _feats(n, 6)
+    want = _quiet(cat, f)
+    big = 1e6
+    inj = FaultInjector(FaultScript(events=(
+        FaultEvent("straggle", 0, 0, delay=big),), n_dev=2))
+    ra, rb, rep = execute_supervised(cat, f, threshold=THRESH, n_dev=2,
+                                     injector=inj)   # no shard deadline
+    assert _pairs(ra, rb) == want
+    hit = [r for r in rep.records if r.injected_delay == big]
+    assert len(hit) == 1 and hit[0].status == "ok"
+    assert hit[0].elapsed < 50.0                # real seconds, not 1e6+
+    assert hit[0].busy == pytest.approx(hit[0].elapsed + big)
+    # the virtual clock DOES see the delay — it models the slow fleet
+    assert rep.measured_makespan_s >= big
+
+
+def test_virtual_delay_still_drives_shard_timeout():
+    cat, n = _catalog("pair_range", [80, 25], r=4)
+    f = _feats(n, 6)
+    inj = FaultInjector(FaultScript(events=(
+        FaultEvent("straggle", 0, 0, delay=1e6),), n_dev=2))
+    ra, rb, rep = execute_supervised(cat, f, threshold=THRESH, n_dev=2,
+                                     shard_deadline=100.0, backoff=0.0,
+                                     injector=inj)
+    assert _pairs(ra, rb) == _quiet(cat, f)     # recovered elsewhere
+    assert any(r.status == "timeout" for r in rep.records)
+
+
+# ---------------------------------------------------------------------------
+# Regression: retry_after_s tracks the live breaker cooldown
+# ---------------------------------------------------------------------------
+
+DS = make_products(250, seed=3)
+CORPUS = DS.titles[:140]
+QUERIES = DS.titles[140:170]
+
+
+def test_retry_after_tracks_remaining_cooldown():
+    cooldown = 5.0
+    svc = ERService(CORPUS, ServiceConfig(
+        feature_dim=128, max_len=48, r=8, m=4, query_buckets=(8, 32),
+        tile_chunk=64, exec_devices=2, backoff_s=0.0, breaker_threshold=1,
+        breaker_cooldown_s=cooldown))
+    svc.set_fault_injector(FaultInjector(FaultScript(events=(
+        FaultEvent("kill", 0, 0), FaultEvent("kill", 1, 0)), n_dev=2)))
+    resp = svc.match(QUERIES[:6])
+    assert resp.degraded                        # both devices evicted
+    with pytest.raises(ServiceUnavailable) as e1:
+        svc.match(QUERIES[:6])
+    assert 0.0 < e1.value.retry_after_s <= cooldown   # was a fixed 1.0
+    time.sleep(0.2)
+    with pytest.raises(ServiceUnavailable) as e2:
+        svc.match(QUERIES[:6])
+    # the advertised wait shrinks as the cooldown actually elapses
+    assert e2.value.retry_after_s <= e1.value.retry_after_s - 0.15

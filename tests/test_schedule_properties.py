@@ -95,3 +95,14 @@ def test_cost_lpt_beats_round_robin_on_skew(bdm, r, n_dev):
 @settings(max_examples=30, deadline=None)
 def test_cost_lpt_never_worse_than_a_tile_quantum(cat, n_dev):
     check_lpt_within_tile_quantum(cat, n_dev)
+
+
+@given(any_catalog(), st.integers(1, 5), st.integers(0, 10 ** 6))
+@settings(max_examples=40, deadline=None)
+def test_calibrated_schedule_preserves_coverage(cat, n_dev, seed):
+    """EWMA calibration re-weights placement only: any randomly-trained
+    feedback model leaves pair coverage/disjointness and exact live-pair
+    load accounting untouched."""
+    from test_feedback_scheduling import \
+        check_calibrated_schedule_preserves_coverage
+    check_calibrated_schedule_preserves_coverage(cat, n_dev, seed)
