@@ -25,7 +25,7 @@ def main(argv=None):
     from . import (chaos_bench, fig8_datasets, fig9_skew,
                    fig10_reduce_tasks, fig11_sorted, fig12_map_output,
                    fig13_scaling, fig_sn_window, kernel_bench,
-                   schedule_bench, steal_bench)
+                   schedule_bench, serve_bench, steal_bench)
 
     suites = {
         "fig8": lambda: fig8_datasets.run(quick=args.quick),
@@ -37,6 +37,7 @@ def main(argv=None):
         "sn_window": lambda: fig_sn_window.run(quick=args.quick),
         "kernels": lambda: kernel_bench.run(quick=args.quick),
         "schedule": lambda: schedule_bench.run(quick=args.quick),
+        "serve": lambda: serve_bench.run(quick=args.quick),
         "chaos": lambda: chaos_bench.run(quick=args.quick),
         "steal": lambda: steal_bench.run(quick=args.quick),
     }

@@ -44,6 +44,7 @@ from .service import (  # noqa: F401
     ServiceUnavailable,
     compile_counter,
 )
+from .batcher import AdmissionError, ERBatcher  # noqa: F401
 from .similarity import (  # noqa: F401
     cosine_scores,
     edit_distance,

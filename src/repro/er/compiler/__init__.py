@@ -91,5 +91,6 @@ from .execute import (  # noqa: F401
     match_catalog,
     score_catalog,
     shard_sane,
+    stage1_stats,
     verify_pairs,
 )

@@ -43,6 +43,7 @@ __all__ = [
     "execute_supervised",
     "make_scorer",
     "score_catalog",
+    "stage1_stats",
     "verify_pairs",
     "match_catalog",
     "shard_sane",
@@ -88,15 +89,55 @@ def _pad_pow2(t: int, cap: int) -> int:
 # Single-host stage 1
 # ---------------------------------------------------------------------------
 
+# Host-side instrumentation of stage 1 survivor decoding, keyed by path:
+#   compact_decodes  — chunks decoded from the on-device packed epilogue
+#   nonzero_decodes  — chunks decoded via the dense mask + np.nonzero
+#   compact_overflows — compact chunks whose exact counts exceeded the
+#                       capacity, forcing an exact mask-path fallback
+# serve_bench asserts nonzero_decodes stays 0 across steady-state
+# serving (the compaction epilogue replaced the host round-trip).
+stage1_stats: dict = {"compact_decodes": 0, "nonzero_decodes": 0,
+                      "compact_overflows": 0}
+
+
+def _decode_packed(packed: np.ndarray, counts: np.ndarray,
+                   chunk: np.ndarray, bm: int, bn: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Packed (T, capacity) survivor slots + exact (T,) counts → global
+    (rows_a, rows_b), O(survivors) host work — no scan of dead cells."""
+    tot = int(counts.sum())
+    if tot == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    ti = np.repeat(np.arange(counts.size), counts)
+    starts = np.cumsum(counts) - counts
+    slot = np.arange(tot) - np.repeat(starts, counts)
+    flat = packed[ti, slot].astype(np.int64)
+    rows_a = chunk[ti, A_TILE].astype(np.int64) * bm + flat // bn
+    rows_b = chunk[ti, B_TILE].astype(np.int64) * bn + flat % bn
+    return rows_a, rows_b
+
+
 def score_catalog(feats_a, catalog: TileCatalog, feats_b=None, *,
                   threshold: float, impl: str = "auto",
-                  chunk_tiles: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
+                  chunk_tiles: int = 1024, compact: bool = True,
+                  compact_capacity: Optional[int] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
     """Stage 1 for a whole catalog on one host: survivor candidate pairs.
 
     Runs the catalog through the kernel in fixed-size chunks (padded to
-    powers of two so jit caches a handful of shapes), compacts each
-    chunk's (chunk, bm, bn) survivor mask into global (row_a, row_b)
-    indices. Returns two int64 arrays.
+    powers of two so jit caches a handful of shapes) and compacts each
+    chunk's survivors into global (row_a, row_b) indices. With
+    ``compact`` (the default on the compiled xla/pallas paths) the
+    compaction happens ON DEVICE — the kernel's prefix-sum epilogue
+    returns packed slot ids + exact counts and the host decode is
+    O(survivors); interpret mode keeps the dense-mask + ``np.nonzero``
+    path (a Python emulator gains nothing from an emulated epilogue).
+
+    ``compact_capacity`` bounds the packed slots per tile (default
+    bm·bn, which can never overflow). A smaller capacity shrinks the
+    device→host transfer; tiles whose EXACT count exceeds it fall back
+    to the mask path for that chunk — still exact, counted in
+    ``stage1_stats['compact_overflows']``. Returns two int64 arrays.
     """
     from ...kernels import ops
 
@@ -108,6 +149,13 @@ def score_catalog(feats_a, catalog: TileCatalog, feats_b=None, *,
     tiles = catalog.tiles
     bm, bn = catalog.block_m, catalog.block_n
     t_total = tiles.shape[0]
+    # Interpret mode emulates the kernel in Python — the one-hot packing
+    # epilogue is O(bm·bn·capacity) numpy per tile there, so the dense
+    # mask is the honest path; compiled backends take the epilogue.
+    on_device = impl == "xla" or (impl == "pallas"
+                                  and jax.default_backend() == "tpu")
+    use_compact = compact and on_device
+    capacity = compact_capacity if compact_capacity is not None else bm * bn
     out_a, out_b = [], []
     for lo in range(0, t_total, chunk_tiles):
         chunk = tiles[lo:lo + chunk_tiles]
@@ -116,9 +164,26 @@ def score_catalog(feats_a, catalog: TileCatalog, feats_b=None, *,
             # Empty entries: zero windows (r0 == r1) mask everything out.
             pad = np.zeros((padded - chunk.shape[0], NCOLS), np.int32)
             chunk = np.concatenate([chunk, pad], axis=0)
+        chunk_j = jnp.asarray(chunk)
+        if use_compact:
+            packed, counts = ops.pair_scores_catalog_compact(
+                fa, fb, chunk_j, threshold=threshold,
+                block_m=bm, block_n=bn, capacity=capacity, impl=impl)
+            counts = np.asarray(counts).reshape(-1).astype(np.int64)
+            if counts.max(initial=0) <= capacity:
+                stage1_stats["compact_decodes"] += 1
+                ra, rb = _decode_packed(np.asarray(packed), counts,
+                                        chunk, bm, bn)
+                out_a.append(ra)
+                out_b.append(rb)
+                continue
+            # Exact counts flagged dropped survivors: re-score this
+            # chunk through the dense mask (exactness over speed).
+            stage1_stats["compact_overflows"] += 1
         mask = np.asarray(ops.pair_scores_catalog(
-            fa, fb, jnp.asarray(chunk), threshold=threshold,
+            fa, fb, chunk_j, threshold=threshold,
             block_m=bm, block_n=bn, impl=impl))
+        stage1_stats["nonzero_decodes"] += 1
         ti, ii, jj = np.nonzero(mask)
         out_a.append(chunk[ti, A_TILE].astype(np.int64) * bm + ii)
         out_b.append(chunk[ti, B_TILE].astype(np.int64) * bn + jj)
@@ -213,7 +278,9 @@ def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
             schedule: Optional[Schedule] = None,
             healthy: Optional[np.ndarray] = None,
             scorer=None, fixed_chunks: bool = False,
-            halo: int = 0, base: Optional[np.ndarray] = None
+            halo: int = 0, base: Optional[np.ndarray] = None,
+            compact: bool = True,
+            compact_capacity: Optional[int] = None
             ) -> Tuple[np.ndarray, np.ndarray]:
     """Stage 1 of ANY lowered catalog: compacted survivor candidates.
 
@@ -238,7 +305,8 @@ def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
     if mesh is None:
         return score_catalog(feats_a, catalog, feats_b,
                              threshold=threshold, impl=impl,
-                             chunk_tiles=chunk_tiles)
+                             chunk_tiles=chunk_tiles, compact=compact,
+                             compact_capacity=compact_capacity)
     n_dev = int(mesh.shape[axis])
     bm, bn = catalog.block_m, catalog.block_n
     tiles_dev = tiles_for_devices(catalog, n_dev, healthy, schedule)
@@ -355,7 +423,9 @@ def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
                        partial: bool = False,
                        feedback: Optional[EwmaCostModel] = None,
                        steal_factor: Optional[float] = None,
-                       steal_quantum: Optional[int] = None
+                       steal_quantum: Optional[int] = None,
+                       compact: bool = True,
+                       compact_capacity: Optional[int] = None
                        ) -> Tuple[np.ndarray, np.ndarray, SupervisedReport]:
     """Stage 1 with tile-granular fault recovery over logical devices.
 
@@ -511,7 +581,8 @@ def execute_supervised(catalog: TileCatalog, feats_a, feats_b=None, *,
                 ra, rb = score_catalog(
                     feats_a, _sub_catalog(catalog, mine), feats_b,
                     threshold=threshold, impl=impl,
-                    chunk_tiles=chunk_tiles)
+                    chunk_tiles=chunk_tiles, compact=compact,
+                    compact_capacity=compact_capacity)
                 if plan is not None:
                     extra = plan.delay
                     if plan.corrupt:
@@ -610,14 +681,17 @@ def match_catalog(catalog: TileCatalog, feats_a, codes_a, lens_a, *,
                   threshold: float = 0.8, filter_margin: float = 0.25,
                   impl: str = "auto", mesh: Optional[Mesh] = None,
                   axis: str = "data", schedule: Optional[Schedule] = None,
-                  chunk_tiles: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
+                  chunk_tiles: int = 1024,
+                  compact_capacity: Optional[int] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
     """Fused filter-and-verify: kernel stage 1 over the tile catalog,
     exact stage 2 on compacted survivors. Returns matched (rows_a, rows_b)
     — indices into the a-side (and b-side, if distinct) arrays."""
     cand_a, cand_b = execute(
         catalog, feats_a, feats_b,
         threshold=threshold - filter_margin, impl=impl,
-        mesh=mesh, axis=axis, schedule=schedule, chunk_tiles=chunk_tiles)
+        mesh=mesh, axis=axis, schedule=schedule, chunk_tiles=chunk_tiles,
+        compact_capacity=compact_capacity)
     if codes_b is None:
         codes_b, lens_b = codes_a, lens_a
     return verify_pairs(codes_a, lens_a, codes_b, lens_b,

@@ -138,6 +138,16 @@ class EwmaCostModel:
                 float(self._cls[device, c]), share * seconds / cost[c])
         self.observations += 1
 
+    def reset_device(self, device: int) -> None:
+        """Forget everything learned about one device (its per-class and
+        per-device rates fall back to the global prior). The circuit
+        breaker calls this on re-admission: rates accumulated while the
+        device straggled describe the device that got evicted, not the
+        recovered one that just passed a probe — keeping them would
+        under-schedule a healthy device indefinitely."""
+        self._dev[device] = np.nan
+        self._cls[device, :] = np.nan
+
     # -- queries ---------------------------------------------------------
 
     def rate(self, device: int, cls: Optional[int] = None) -> float:

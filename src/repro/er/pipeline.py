@@ -107,6 +107,9 @@ class ERConfig:
     # ---- runtime feedback (supervised catalog executor only) ----
     steal_factor: Optional[float] = None   # > 0: mid-stream work stealing
     steal_quantum: Optional[int] = None    # tiles per dispatch batch
+    # ---- stage-1 survivor compaction (catalog executor) ----
+    compact_capacity: Optional[int] = None  # packed slots per tile;
+                                            # None = bm·bn (never overflows)
 
 
 @dataclass
@@ -336,7 +339,8 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
             shard_deadline=cfg.shard_deadline_s,
             max_retries=cfg.max_retries, backoff=cfg.backoff_s,
             feedback=feedback, steal_factor=cfg.steal_factor,
-            steal_quantum=cfg.steal_quantum)
+            steal_quantum=cfg.steal_quantum,
+            compact_capacity=cfg.compact_capacity)
         attempts = max(attempts, rep.rounds)
         recovered_tiles += rep.recovered_tiles
         planned_cost += rep.planned_cost
@@ -365,7 +369,8 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
             ha, hb = match_catalog(
                 apply_schedule(catalog, sched), g_feats, g_codes, g_lens,
                 threshold=cfg.threshold, filter_margin=cfg.filter_margin,
-                impl=cfg.kernel_impl)
+                impl=cfg.kernel_impl,
+                compact_capacity=cfg.compact_capacity)
         elapsed = time.perf_counter() - t0
         for a, b in zip(to_global[ha], to_global[hb]):
             matches.add((min(int(a), int(b)), max(int(a), int(b))))
@@ -404,7 +409,8 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
                     feats_b=feats[null_idx], codes_b=codes[null_idx],
                     lens_b=lens[null_idx],
                     threshold=cfg.threshold, filter_margin=cfg.filter_margin,
-                    impl=cfg.kernel_impl)
+                    impl=cfg.kernel_impl,
+                    compact_capacity=cfg.compact_capacity)
             for a, b in zip(ha, null_idx[hb]):
                 a, b = int(a), int(b)
                 if a != b:

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field as dataclasses_field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -188,6 +188,56 @@ class MatchResponse(set):
 
 
 @dataclass
+class _RequestContext:
+    """Request-scoped execution state. One instance is created at the
+    OUTER ``match`` entry and threaded through every slice and job of
+    that request — the deadline is armed exactly once (an oversized
+    batch's k slices share one budget instead of re-arming k fresh
+    ones), and supervised reports accumulate here instead of on the
+    service instance (where overlapping requests from the batcher's
+    threads would clobber each other)."""
+    deadline_at: Optional[float] = None   # absolute perf_counter deadline
+    reports: List[SupervisedReport] = dataclasses_field(
+        default_factory=list)
+
+
+@dataclass
+class _PlannedJob:
+    """One lowered stage-1 job of a planned batch: everything the
+    executor needs, with no remaining dependence on mutable host state.
+
+    ``map_a``/``map_b`` translate survivor (a, b) coordinates back to
+    (corpus_index, query_index_within_batch); ``map_a`` None means the
+    a-side rows already are corpus indices."""
+    feats_a: object
+    catalog: object
+    q_buf: np.ndarray
+    codes_a: np.ndarray
+    lens_a: np.ndarray
+    codes_b: np.ndarray
+    lens_b: np.ndarray
+    map_a: Optional[np.ndarray]
+    map_b: np.ndarray
+
+
+@dataclass
+class _PlannedBatch:
+    """The host-side half of one batch: featurized queries planned,
+    lowered and padded into fixed-shape jobs. Produced by
+    ``ERService._plan_batch`` (under the service's host lock — it folds
+    the batch into the vocab/BDM), consumed by ``_execute_batch``
+    (device-side, lock-free). The split is what lets the batcher
+    pipeline the next batch's planning under the current batch's
+    kernels."""
+    nq: int
+    bucket: int
+    t0: float
+    record: bool
+    planned: int                  # live pairs planned across the jobs
+    jobs: List[_PlannedJob]
+
+
+@dataclass
 class ServiceConfig:
     strategy: str = "pair_range"          # two-source planner: pair_range
                                           # | block_split
@@ -204,6 +254,9 @@ class ServiceConfig:
     kernel_impl: str = "auto"             # auto | pallas | interpret | xla
     query_buckets: Tuple[int, ...] = (8, 32, 128, 512)  # batch pad sizes
     tile_chunk: int = 256                 # fixed catalog chunk (tiles/launch)
+    compact_capacity: Optional[int] = None  # stage-1 packed survivor slots
+                                            # per tile; None = bm·bn (the
+                                            # no-overflow default)
     schedule_policy: str = "cost_lpt"     # cost_lpt | round_robin
     # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
     exec_devices: int = 0                 # > 0: supervised stage 1 over N
@@ -256,8 +309,12 @@ class ERService:
         self.fault_injector: Optional[FaultInjector] = None
         self._fail_streak = np.zeros(self._n_exec, np.int64)
         self._breaker_open: Dict[int, float] = {}   # device → eviction time
-        self._reports: List[SupervisedReport] = []  # per-request scratch
-        self._deadline_at: Optional[float] = None   # per-request deadline
+        # Serializes mutation of host-side shared state (vocab, BDMs,
+        # stats, breaker) so overlapping requests — the batcher's planner
+        # runs concurrently with its executor — stay correct. Request-
+        # scoped state (deadline, reports) lives on _RequestContext, NOT
+        # here: an instance field would be clobbered across threads.
+        self._host_lock = threading.RLock()
         self._buckets = tuple(sorted(cfg.query_buckets))
         if not self._buckets:
             raise ValueError("query_buckets must be non-empty")
@@ -376,7 +433,8 @@ class ERService:
         buf[:feats.shape[0]] = feats
         return buf
 
-    def _score(self, feats_a, catalog, q_buf: np.ndarray):
+    def _score(self, feats_a, catalog, q_buf: np.ndarray,
+               ctx: _RequestContext):
         """Stage 1 with fixed shapes: the catalog is pre-padded to a
         tile_chunk multiple, the query buffer to a bucket size, so every
         kernel launch hits a warmed compile-cache entry. Tiles route to
@@ -389,7 +447,7 @@ class ERService:
         cfg = self.cfg
         catalog = pad_catalog(catalog, cfg.tile_chunk)
         if self._use_supervisor:
-            return self._score_supervised(feats_a, catalog, q_buf)
+            return self._score_supervised(feats_a, catalog, q_buf, ctx)
         # Scheduling places tiles on devices — a single-host service has
         # nowhere to place them, so skip the per-batch host work.
         sched = (schedule_tiles(catalog, n_dev=self._n_dev,
@@ -400,7 +458,8 @@ class ERService:
             threshold=self._stage1, impl=cfg.kernel_impl,
             mesh=self.mesh, axis=self.axis, schedule=sched,
             scorer=self._dist_scorer, chunk_tiles=cfg.tile_chunk,
-            fixed_chunks=self.mesh is not None)
+            fixed_chunks=self.mesh is not None,
+            compact_capacity=cfg.compact_capacity)
 
     # ------------------------------------------------------------------
     # Fault-tolerant execution: supervisor + circuit breaker
@@ -430,38 +489,49 @@ class ERService:
         probe it (one injector shard call — a trivially cheap health RPC
         in a real deployment). Probe success re-admits the device and
         resets its failure streak; failure restarts the cooldown."""
-        now = time.monotonic()
-        for d, opened in list(self._breaker_open.items()):
-            if now - opened < self.cfg.breaker_cooldown_s:
-                continue
-            ok = True
-            if self.fault_injector is not None:
-                try:
-                    self.fault_injector.shard_call(d)
-                except (DeviceKilledError, TransientScorerError):
-                    ok = False
-            if ok:
-                del self._breaker_open[d]
-                self._fail_streak[d] = 0
-                self.stats["breaker_readmissions"] += 1
-            else:
-                self._breaker_open[d] = now
+        with self._host_lock:
+            now = time.monotonic()
+            for d, opened in list(self._breaker_open.items()):
+                if now - opened < self.cfg.breaker_cooldown_s:
+                    continue
+                ok = True
+                if self.fault_injector is not None:
+                    try:
+                        self.fault_injector.shard_call(d)
+                    except (DeviceKilledError, TransientScorerError):
+                        ok = False
+                if ok:
+                    del self._breaker_open[d]
+                    self._fail_streak[d] = 0
+                    if self.feedback is not None:
+                        # The EWMA rates this device accumulated while it
+                        # straggled describe the device that got EVICTED,
+                        # not the one that just passed a health probe —
+                        # keeping them would under-schedule the recovered
+                        # device indefinitely. Forget them; the next
+                        # accepted shard call re-calibrates from the
+                        # global rate.
+                        self.feedback.reset_device(d)
+                    self.stats["breaker_readmissions"] += 1
+                else:
+                    self._breaker_open[d] = now
 
     def _update_breaker(self, report: SupervisedReport):
         """Fold a job's shard records into the per-device failure
         streaks; devices at ``breaker_threshold`` consecutive failures
         are evicted until a probe succeeds."""
-        now = time.monotonic()
-        for rec in report.records:
-            if rec.status == "ok":
-                self._fail_streak[rec.device] = 0
-            else:
-                self._fail_streak[rec.device] += 1
-                if (self._fail_streak[rec.device]
-                        >= self.cfg.breaker_threshold
-                        and rec.device not in self._breaker_open):
-                    self._breaker_open[rec.device] = now
-                    self.stats["breaker_evictions"] += 1
+        with self._host_lock:
+            now = time.monotonic()
+            for rec in report.records:
+                if rec.status == "ok":
+                    self._fail_streak[rec.device] = 0
+                else:
+                    self._fail_streak[rec.device] += 1
+                    if (self._fail_streak[rec.device]
+                            >= self.cfg.breaker_threshold
+                            and rec.device not in self._breaker_open):
+                        self._breaker_open[rec.device] = now
+                        self.stats["breaker_evictions"] += 1
 
     def _retry_after(self) -> float:
         """Seconds until the LAST evicted device becomes probeable — a
@@ -476,10 +546,15 @@ class ERService:
                   for t in self._breaker_open.values())
         return min(max(rem, 1e-3), max(self.cfg.breaker_cooldown_s, 1e-3))
 
-    def _score_supervised(self, feats_a, catalog, q_buf: np.ndarray):
+    def _score_supervised(self, feats_a, catalog, q_buf: np.ndarray,
+                          ctx: _RequestContext):
         """Stage 1 through the fault-tolerant supervisor on
-        ``cfg.exec_devices`` logical shards. Collects the report for the
-        request-level coverage aggregation and feeds the breaker."""
+        ``cfg.exec_devices`` logical shards. Collects the report on the
+        request context for the coverage aggregation and feeds the
+        breaker. The wall budget is whatever remains of the REQUEST's
+        deadline — armed once at the outer ``match`` entry, so an
+        oversized request's later slices see a shrinking budget instead
+        of each re-arming a fresh one."""
         cfg = self.cfg
         self._probe_evicted()
         healthy = self._exec_mask()
@@ -488,8 +563,8 @@ class ERService:
                 "all execution devices are circuit-broken",
                 retry_after_s=self._retry_after())
         remaining = None
-        if self._deadline_at is not None:
-            remaining = max(self._deadline_at - time.perf_counter(), 0.0)
+        if ctx.deadline_at is not None:
+            remaining = max(ctx.deadline_at - time.perf_counter(), 0.0)
         try:
             ra, rb, report = execute_supervised(
                 catalog, feats_a, jnp.asarray(q_buf),
@@ -502,19 +577,28 @@ class ERService:
                 backoff_factor=cfg.backoff_factor,
                 partial=cfg.partial_results, feedback=self.feedback,
                 steal_factor=cfg.steal_factor,
-                steal_quantum=cfg.steal_quantum)
+                steal_quantum=cfg.steal_quantum,
+                compact_capacity=cfg.compact_capacity)
         except NoHealthyDevicesError as e:
             # Only reachable with partial_results=False: every device
             # died mid-job. Surface retry-after instead of a traceback.
             raise ServiceUnavailable(
                 str(e), retry_after_s=self._retry_after()) from e
         self._update_breaker(report)
-        self._reports.append(report)
+        ctx.reports.append(report)
         return ra, rb
 
     # ------------------------------------------------------------------
     # Serving
     # ------------------------------------------------------------------
+
+    def _new_request_ctx(self) -> _RequestContext:
+        """Arm one request's deadline (ONCE — slices share the budget)
+        and its report accumulator."""
+        deadline_at = (time.perf_counter() + self.cfg.request_deadline_s
+                       if self.cfg.request_deadline_s is not None
+                       else None)
+        return _RequestContext(deadline_at=deadline_at)
 
     def match(self, query_titles: Sequence[str],
               _record: bool = True) -> "MatchResponse":
@@ -529,117 +613,158 @@ class ERService:
         bucket are served in top-bucket slices.
 
         With supervision enabled, a per-request deadline
-        (``cfg.request_deadline_s``) bounds recovery; on exhaustion the
-        response carries the survivors found so far with
-        ``coverage < 1`` (``cfg.partial_results``) instead of failing.
-        :class:`ServiceUnavailable` (with ``retry_after_s``) is raised
-        only when every execution device is circuit-broken.
+        (``cfg.request_deadline_s``) bounds recovery — armed once for
+        the whole request, so an oversized batch's slices spend ONE
+        shared budget; on exhaustion the response carries the survivors
+        found so far with ``coverage < 1`` (``cfg.partial_results``)
+        instead of failing. :class:`ServiceUnavailable` (with
+        ``retry_after_s``) is raised only when every execution device is
+        circuit-broken.
+
+        Thread-safe: concurrent calls see exactly the sequential match
+        sets (request state is per-call, host-side index mutation is
+        locked). For throughput under concurrency use
+        :class:`~.batcher.ERBatcher`, which coalesces submitters into
+        super-batches instead of serializing them.
         """
         query_titles = list(query_titles)
         nq = len(query_titles)
         if nq == 0 or self.n_corpus == 0:
             return MatchResponse()
+        ctx = self._new_request_ctx()
         cap = self._buckets[-1]
-        if nq > cap:
-            out = MatchResponse()
-            for lo in range(0, nq, cap):
-                part = self.match(query_titles[lo:lo + cap],
-                                  _record=_record)
-                for a, b in part:
-                    out.add((a, b + lo))
-                out.attempts = max(out.attempts, part.attempts)
-                out.recovered_tiles += part.recovered_tiles
-                out.planned_cost += part.planned_cost
-                out.scored_cost += part.scored_cost
-                out.steals += part.steals
-                out.stolen_tiles += part.stolen_tiles
-                out.degraded = out.degraded or part.degraded
-            return out
+        if nq <= cap:
+            return self._match_slice(query_titles, ctx, _record)
+        out = MatchResponse()
+        for lo in range(0, nq, cap):
+            part = self._match_slice(query_titles[lo:lo + cap], ctx,
+                                     _record)
+            for a, b in part:
+                out.add((a, b + lo))
+            out.attempts = max(out.attempts, part.attempts)
+            out.recovered_tiles += part.recovered_tiles
+            out.planned_cost += part.planned_cost
+            out.scored_cost += part.scored_cost
+            out.steals += part.steals
+            out.stolen_tiles += part.stolen_tiles
+            out.degraded = out.degraded or part.degraded
+        return out
 
+    def _match_slice(self, titles: List[str], ctx: _RequestContext,
+                     record: bool) -> "MatchResponse":
+        return self._execute_batch(self._plan_batch(titles, ctx, record),
+                                   ctx)
+
+    def _plan_batch(self, titles: List[str], ctx: _RequestContext,
+                    record: bool = True) -> _PlannedBatch:
+        """Host-side half of one ≤ top-bucket batch: featurize, fold the
+        batch into the vocab/BDM, plan and lower every job to padded
+        fixed-shape catalogs. Everything that touches mutable service
+        state happens here under the host lock; the returned
+        :class:`_PlannedBatch` is self-contained, so ``_execute_batch``
+        can run it on another thread while the next batch plans."""
         t0 = time.perf_counter()
-        self._deadline_at = (t0 + self.cfg.request_deadline_s
-                             if self.cfg.request_deadline_s is not None
-                             else None)
-        self._reports = []
-        bucket = self._bucket(nq)
         cfg = self.cfg
-        codes, lens, feats = featurize(query_titles, cfg)
-        qb = self._query_block_ids(query_titles, record=_record)
-        matches = MatchResponse()
+        nq = len(titles)
+        bucket = self._bucket(nq)
+        codes, lens, feats = featurize(titles, cfg)
+        jobs: List[_PlannedJob] = []
         planned = 0
+        with self._host_lock:
+            qb = self._query_block_ids(titles, record=record)
 
-        # ---- keyed queries × same-block corpus (two-source R × S) ----
-        keyed_q = np.flatnonzero(qb >= 0)
-        if keyed_q.size and self._feats_keyed is not None:
-            qkb = qb[keyed_q]
-            order = np.argsort(qkb, kind="stable")
-            q_rows = keyed_q[order]            # blocked S layout → batch idx
-            bdm_s = np.bincount(
-                qkb, minlength=self._bdm.shape[0]).astype(np.int64)[:, None]
-            bdm2 = TwoSourceBDM(bdm_r=self._bdm, bdm_s=bdm_s)
-            planner = (plan_block_split_2src if cfg.strategy == "block_split"
-                       else plan_pair_range_2src)
-            plan = planner(bdm2, cfg.r)
-            planned += plan.total_pairs
-            cat = lower(plan_to_job(plan), cfg.block_m, cfg.block_n)
-            ca, cb = self._score(
-                self._feats_keyed, cat,
-                self._bucket_buffer(feats[q_rows], bucket))
-            ha, hb = verify_pairs(self._k_codes, self._k_lens,
-                                  codes[q_rows], lens[q_rows],
+            # ---- keyed queries × same-block corpus (two-source R×S) ----
+            keyed_q = np.flatnonzero(qb >= 0)
+            if keyed_q.size and self._feats_keyed is not None:
+                qkb = qb[keyed_q]
+                order = np.argsort(qkb, kind="stable")
+                q_rows = keyed_q[order]        # blocked S layout → batch idx
+                bdm_s = np.bincount(
+                    qkb,
+                    minlength=self._bdm.shape[0]).astype(np.int64)[:, None]
+                bdm2 = TwoSourceBDM(bdm_r=self._bdm, bdm_s=bdm_s)
+                planner = (plan_block_split_2src
+                           if cfg.strategy == "block_split"
+                           else plan_pair_range_2src)
+                plan = planner(bdm2, cfg.r)
+                planned += plan.total_pairs
+                jobs.append(_PlannedJob(
+                    feats_a=self._feats_keyed,
+                    catalog=lower(plan_to_job(plan),
+                                  cfg.block_m, cfg.block_n),
+                    q_buf=self._bucket_buffer(feats[q_rows], bucket),
+                    codes_a=self._k_codes, lens_a=self._k_lens,
+                    codes_b=codes[q_rows], lens_b=lens[q_rows],
+                    map_a=self._to_global, map_b=q_rows))
+
+            # ---- match_⊥, cross-restricted: null queries × corpus ----
+            null_q = np.flatnonzero(qb < 0)
+            if cfg.match_missing_keys and null_q.size:
+                cat = lower(cross_job(self.n_corpus, int(null_q.size),
+                                      cfg.r), cfg.block_m, cfg.block_n)
+                planned += cat.total_pairs
+                jobs.append(_PlannedJob(
+                    feats_a=self._feats_all, catalog=cat,
+                    q_buf=self._bucket_buffer(feats[null_q], bucket),
+                    codes_a=self._codes, lens_a=self._lens,
+                    codes_b=codes[null_q], lens_b=lens[null_q],
+                    map_a=None, map_b=null_q))
+
+            # ---- ... and null-key corpus entities × the keyed queries
+            # (match_⊥(R0, S−S0): null × null pairs are already covered
+            # by the null-query job above) ----
+            if cfg.match_missing_keys and self._feats_null is not None \
+                    and keyed_q.size:
+                cat = lower(cross_job(int(self._null_idx.size),
+                                      int(keyed_q.size), cfg.r),
+                            cfg.block_m, cfg.block_n)
+                planned += cat.total_pairs
+                jobs.append(_PlannedJob(
+                    feats_a=self._feats_null, catalog=cat,
+                    q_buf=self._bucket_buffer(feats[keyed_q], bucket),
+                    codes_a=self._n_codes, lens_a=self._n_lens,
+                    codes_b=codes[keyed_q], lens_b=lens[keyed_q],
+                    map_a=self._null_idx, map_b=keyed_q))
+        return _PlannedBatch(nq=nq, bucket=bucket, t0=t0, record=record,
+                             planned=int(planned), jobs=jobs)
+
+    def _execute_batch(self, pb: _PlannedBatch,
+                       ctx: _RequestContext) -> "MatchResponse":
+        """Device-side half: run each planned job's stage 1 + exact
+        stage 2, demap survivors to (corpus_index, batch_index). Holds
+        no host lock while kernels run — the batcher overlaps the next
+        batch's ``_plan_batch`` with this."""
+        cfg = self.cfg
+        matches = MatchResponse()
+        n_reports = len(ctx.reports)
+        for job in pb.jobs:
+            ca, cb = self._score(job.feats_a, job.catalog, job.q_buf, ctx)
+            ha, hb = verify_pairs(job.codes_a, job.lens_a,
+                                  job.codes_b, job.lens_b,
                                   ca, cb, cfg.threshold)
-            matches.update(
-                (int(self._to_global[a]), int(q_rows[b]))
-                for a, b in zip(ha, hb))
-
-        # ---- match_⊥, cross-restricted: null queries × whole corpus ----
-        null_q = np.flatnonzero(qb < 0)
-        if cfg.match_missing_keys and null_q.size:
-            cat = lower(cross_job(self.n_corpus, int(null_q.size), cfg.r),
-                        cfg.block_m, cfg.block_n)
-            planned += cat.total_pairs
-            ca, cb = self._score(
-                self._feats_all, cat,
-                self._bucket_buffer(feats[null_q], bucket))
-            ha, hb = verify_pairs(self._codes, self._lens,
-                                  codes[null_q], lens[null_q],
-                                  ca, cb, cfg.threshold)
-            matches.update((int(a), int(null_q[b])) for a, b in zip(ha, hb))
-
-        # ---- ... and null-key corpus entities × the keyed queries
-        # (match_⊥(R0, S−S0): null × null pairs are already covered by
-        # the null-query job above) ----
-        if cfg.match_missing_keys and self._feats_null is not None \
-                and keyed_q.size:
-            cat = lower(cross_job(int(self._null_idx.size),
-                                  int(keyed_q.size), cfg.r),
-                        cfg.block_m, cfg.block_n)
-            planned += cat.total_pairs
-            ca, cb = self._score(self._feats_null, cat,
-                                 self._bucket_buffer(feats[keyed_q], bucket))
-            ha, hb = verify_pairs(self._n_codes, self._n_lens,
-                                  codes[keyed_q], lens[keyed_q],
-                                  ca, cb, cfg.threshold)
-            matches.update(
-                (int(self._null_idx[a]), int(keyed_q[b]))
-                for a, b in zip(ha, hb))
-
-        for report in self._reports:
+            if job.map_a is None:
+                matches.update(
+                    (int(a), int(job.map_b[b])) for a, b in zip(ha, hb))
+            else:
+                matches.update(
+                    (int(job.map_a[a]), int(job.map_b[b]))
+                    for a, b in zip(ha, hb))
+        for report in ctx.reports[n_reports:]:
             matches._fold(report)
-        self._reports = []
-        if _record:
-            s = self.stats
-            s["batches"] += 1
-            s["queries"] += nq
-            s["planned_pairs"] += int(planned)
-            s["matches"] += len(matches)
-            s["seconds"] += time.perf_counter() - t0
-            s["bucket_hits"][bucket] += 1
-            s["retries"] += max(matches.attempts - 1, 0)
-            s["recovered_tiles"] += matches.recovered_tiles
-            s["degraded"] += int(matches.degraded)
-            s["steals"] += matches.steals
-            s["stolen_tiles"] += matches.stolen_tiles
+        if pb.record:
+            with self._host_lock:
+                s = self.stats
+                s["batches"] += 1
+                s["queries"] += pb.nq
+                s["planned_pairs"] += pb.planned
+                s["matches"] += len(matches)
+                s["seconds"] += time.perf_counter() - pb.t0
+                s["bucket_hits"][pb.bucket] += 1
+                s["retries"] += max(matches.attempts - 1, 0)
+                s["recovered_tiles"] += matches.recovered_tiles
+                s["degraded"] += int(matches.degraded)
+                s["steals"] += matches.steals
+                s["stolen_tiles"] += matches.stolen_tiles
         return matches
 
     def warmup(self) -> int:

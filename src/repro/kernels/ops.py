@@ -18,8 +18,11 @@ from .flash_attention import flash_attention as _flash
 from .grouped_mm import grouped_matmul as _gmm, pad_groups  # noqa: F401
 from .pair_sim import pair_scores as _pair_scores
 from .pair_sim import pair_scores_catalog as _pair_scores_catalog
+from .pair_sim import \
+    pair_scores_catalog_compact as _pair_scores_catalog_compact
 
-__all__ = ["pair_scores", "pair_scores_catalog", "grouped_matmul",
+__all__ = ["pair_scores", "pair_scores_catalog",
+           "pair_scores_catalog_compact", "grouped_matmul",
            "attention", "pad_groups"]
 
 
@@ -53,6 +56,24 @@ def pair_scores_catalog(a, b, catalog, *, threshold: float = 0.8,
     return _pair_scores_catalog(a, b, catalog, threshold=threshold,
                                 block_m=block_m, block_n=block_n,
                                 interpret=(impl == "interpret"))
+
+
+def pair_scores_catalog_compact(a, b, catalog, *, threshold: float = 0.8,
+                                block_m: int = 128, block_n: int = 128,
+                                capacity: int = 1024, impl: str = "pallas"):
+    """Tile-catalog survivors packed on device (see
+    pair_sim.pair_scores_catalog_compact): ``(packed, counts)`` instead
+    of a dense mask — the serving stage 1 uses this so the host never
+    runs ``np.nonzero`` over T·bm·bn cells."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.pair_scores_catalog_compact_ref(
+            a, b, catalog, threshold=threshold,
+            block_m=block_m, block_n=block_n, capacity=capacity)
+    return _pair_scores_catalog_compact(
+        a, b, catalog, threshold=threshold, block_m=block_m,
+        block_n=block_n, capacity=capacity,
+        interpret=(impl == "interpret"))
 
 
 def grouped_matmul(x, tile_expert, w, *, block_t: int = 128,

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pair_scores", "pair_scores_catalog", "catalog_tile_mask", "NCOLS"]
+__all__ = ["pair_scores", "pair_scores_catalog",
+           "pair_scores_catalog_compact", "catalog_tile_mask", "NCOLS"]
 
 # Catalog entry layout (int32 columns) — shared with er/executor.py and
 # kernels/ref.py. Rows/cols below are *global* row indices of the feature
@@ -176,5 +177,119 @@ def pair_scores_catalog(a, b, catalog, *, threshold: float = 0.8,
                           block_m=block_m, block_n=block_n),
         grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1),
         out_shape=jax.ShapeDtypeStruct((t, block_m, block_n), jnp.float32),
+        interpret=interpret,
+    )(catalog, a_p, b_p)
+
+
+def _catalog_compact_kernel(cat_ref, a_ref, b_ref, packed_ref, count_ref, *,
+                            threshold: float, block_m: int, block_n: int,
+                            capacity: int):
+    t = pl.program_id(0)
+    a = a_ref[...]                       # (block_m, d) — strip cat[t, 0]
+    b = b_ref[...]                       # (block_n, d) — strip cat[t, 1]
+    s = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (block_m, block_n) MXU
+    entry = [cat_ref[t, c] for c in range(NCOLS)]
+    gi = entry[0] * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    gj = entry[1] * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    keep = (s >= threshold) & catalog_tile_mask(entry, gi, gj)
+    kf = keep.astype(jnp.float32)
+
+    # Row-major survivor ranks without scatter/sort (neither lowers to
+    # Mosaic): prefix sums become triangular-ones matmuls, MXU-native.
+    # Ranks stay exact in f32 — they are integers < bm·bn ≤ 2^24.
+    cc = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_n), 1)
+    upper = (cc < jj).astype(jnp.float32)          # strict upper (bn, bn)
+    excl = jax.lax.dot_general(                    # within-row exclusive
+        kf, upper, (((1,), (0,)), ((), ())),       # prefix of the mask
+        preferred_element_type=jnp.float32)
+    row_tot = jnp.sum(kf, axis=1, keepdims=True)   # (bm, 1)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (block_m, block_m), 0)
+    rr = jax.lax.broadcasted_iota(jnp.int32, (block_m, block_m), 1)
+    lower = (rr < ii).astype(jnp.float32)          # strict lower (bm, bm)
+    row_off = jax.lax.dot_general(                 # rows-above totals
+        lower, row_tot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (bm, 1)
+    dest = jnp.where(keep, row_off + excl, -1.0)   # pack slot, −1 = dead
+
+    li = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    flat = (li * block_n + lj).astype(jnp.float32)  # tile-local pair id
+
+    # packed[k] = Σ_p [dest_p == k] · flat_p — a one-hot contraction per
+    # row keeps the (capacity, bn) one-hot plane VMEM-resident. Slots
+    # beyond the survivor count (and anything past ``capacity``) simply
+    # accumulate nothing and stay 0.
+    k_iota = jax.lax.broadcasted_iota(jnp.float32, (capacity, block_n), 0)
+
+    def row(r, acc):
+        d_r = jax.lax.dynamic_slice(dest, (r, 0), (1, block_n))
+        v_r = jax.lax.dynamic_slice(flat, (r, 0), (1, block_n))
+        onehot = (d_r == k_iota).astype(jnp.float32)   # (capacity, bn)
+        return acc + jax.lax.dot_general(
+            v_r, onehot, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (1, capacity)
+
+    acc = jax.lax.fori_loop(
+        0, block_m, row, jnp.zeros((1, capacity), jnp.float32))
+    packed_ref[...] = acc.astype(jnp.int32)
+    count_ref[...] = jnp.sum(kf).astype(jnp.int32)[None, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "block_m", "block_n", "capacity",
+                              "interpret"))
+def pair_scores_catalog_compact(a, b, catalog, *, threshold: float = 0.8,
+                                block_m: int = 128, block_n: int = 128,
+                                capacity: int = 1024,
+                                interpret: bool = False):
+    """:func:`pair_scores_catalog` with an on-device survivor-compaction
+    epilogue: instead of a (T, bm, bn) mask the host must ``np.nonzero``,
+    each tile returns its survivors packed into ``capacity`` slots.
+
+    Returns ``(packed, counts)``:
+      * packed (T, capacity) int32 — tile-local flat pair ids
+        ``i·block_n + j`` of the survivors, in row-major order; slots at
+        index >= min(count, capacity) are 0.
+      * counts (T, 1) int32 — the EXACT survivor count per tile, even
+        when it exceeds ``capacity`` (the host detects overflow and
+        falls back to the mask path; survivors past ``capacity`` are
+        dropped from ``packed``).
+
+    The epilogue is scatter-free (Mosaic has no scatter/sort): survivor
+    pack slots come from prefix sums expressed as triangular-ones
+    matmuls, and packing is a one-hot dot contraction — all MXU/VPU
+    primitives, computed per tile while the scores are still in VMEM.
+    """
+    from .grouped_mm import pltpu_prefetch
+
+    m, d = a.shape
+    n = b.shape[0]
+    t = catalog.shape[0]
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    a_p = jnp.zeros((mp, d), a.dtype).at[:m].set(a)
+    b_p = jnp.zeros((np_, d), b.dtype).at[:n].set(b)
+
+    grid_spec = pl.GridSpec(
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, cat: (cat[i, 0], 0)),
+            pl.BlockSpec((block_n, d), lambda i, cat: (cat[i, 1], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, capacity), lambda i, cat: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, cat: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_catalog_compact_kernel, threshold=threshold,
+                          block_m=block_m, block_n=block_n,
+                          capacity=capacity),
+        grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1),
+        out_shape=(jax.ShapeDtypeStruct((t, capacity), jnp.int32),
+                   jax.ShapeDtypeStruct((t, 1), jnp.int32)),
         interpret=interpret,
     )(catalog, a_p, b_p)

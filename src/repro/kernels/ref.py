@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["pair_scores_ref", "pair_scores_catalog_ref",
+           "pair_scores_catalog_compact_ref",
            "grouped_matmul_ref", "attention_ref"]
 
 
@@ -54,6 +55,31 @@ def pair_scores_catalog_ref(a, b, catalog, *, threshold: float = 0.8,
         return keep.astype(jnp.float32)
 
     return jax.vmap(one)(catalog)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "block_m", "block_n", "capacity"))
+def pair_scores_catalog_compact_ref(a, b, catalog, *, threshold: float = 0.8,
+                                    block_m: int = 128, block_n: int = 128,
+                                    capacity: int = 1024):
+    """jnp twin of pair_sim.pair_scores_catalog_compact: same
+    ``(packed, counts)`` contract, built from the mask via an inclusive
+    row-major cumsum (pack slot = rank − 1) and a batched scatter with a
+    dump slot at ``capacity`` that absorbs overflow survivors. Slots
+    beyond min(count, capacity) stay 0, matching the kernel exactly."""
+    masks = pair_scores_catalog_ref(a, b, catalog, threshold=threshold,
+                                    block_m=block_m, block_n=block_n)
+    t = masks.shape[0]
+    p = block_m * block_n
+    flat = masks.reshape(t, p) > 0
+    cum = jnp.cumsum(flat.astype(jnp.int32), axis=1)
+    counts = cum[:, -1:]
+    dest = jnp.where(flat, jnp.minimum(cum - 1, capacity), capacity)
+    pos = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (t, p))
+    packed = jnp.zeros((t, capacity + 1), jnp.int32)
+    packed = packed.at[jnp.arange(t)[:, None], dest].set(
+        jnp.where(flat, pos, 0))
+    return packed[:, :capacity], counts
 
 
 def grouped_matmul_ref(x, tile_expert, w, *, block_t: int = 128):

@@ -293,6 +293,78 @@ CORPUS = DS.titles[:140]
 QUERIES = DS.titles[140:170]
 
 
+def _svc_cfg(**kw):
+    base = dict(feature_dim=128, max_len=48, r=8, m=4,
+                query_buckets=(8, 32), tile_chunk=64)
+    base.update(kw)
+    return ServiceConfig(**base)
+
+
+def test_breaker_readmission_resets_stale_ewma():
+    """REGRESSION (PR 8): a breaker-readmitted device kept the EWMA
+    rates it accumulated WHILE it straggled, so feedback scheduling kept
+    starving a now-healthy device indefinitely (EWMA decay from a 1e6×
+    outlier takes hundreds of folds). Readmission resets the device's
+    rates to the global fallback — one probe restores its placement
+    share."""
+    svc = ERService(CORPUS, _svc_cfg(exec_devices=2,
+                                     feedback_scheduling=True,
+                                     breaker_cooldown_s=0.05))
+    fb = svc.feedback
+    even = np.zeros(N_TILE_CLASSES)
+    even[0] = 1000.0
+    for _ in range(6):
+        fb.observe(1, even, seconds=1e2)      # straggle era: 0.1 s/pair
+    for _ in range(40):
+        fb.observe(0, even, seconds=1e-4)     # healthy fleet: 1e-7 s/pair
+    stale = fb.rate(1)
+    cat, _ = _catalog("pair_range", [90, 40, 12], r=8)
+    starved = schedule_tiles(cat, n_dev=2, feedback=fb)
+    assert starved.device_load[1] / cat.total_pairs < 0.05
+    svc._breaker_open[1] = time.monotonic() - 1.0   # cooldown elapsed
+    svc._probe_evicted()                      # probe succeeds → readmit
+    assert not svc._breaker_open
+    assert svc.stats["breaker_readmissions"] == 1
+    assert fb.rate(1) < stale / 50            # stale rates forgotten
+    recovered = schedule_tiles(cat, n_dev=2, feedback=fb)
+    assert recovered.device_load[1] / cat.total_pairs > 0.3
+
+
+def test_readmitted_device_recovers_placement_share():
+    """End to end: device 1 dies and is evicted with terrible
+    straggle-era EWMA rates on the books; after a revive the probe
+    readmits it, the reset drops the stale rates, and the very next
+    batches place real work on it again (its rate is re-learned from
+    accepted shard calls instead of staying pinned at the outlier)."""
+    svc = ERService(CORPUS, _svc_cfg(exec_devices=2,
+                                     feedback_scheduling=True,
+                                     backoff_s=0.0, breaker_threshold=1,
+                                     breaker_cooldown_s=0.0))
+    svc.warmup()
+    want = set(ERService(CORPUS, _svc_cfg()).match(QUERIES[:8]))
+    fb = svc.feedback
+    svc.set_fault_injector(FaultInjector(FaultScript(events=(
+        FaultEvent("kill", 1, 0), FaultEvent("revive", 1, 12)), n_dev=2)))
+    assert set(svc.match(QUERIES[:8])) == want      # recovered on dev 0
+    assert svc.stats["breaker_evictions"] >= 1
+    # the rates device 1 accrued while it declined: 1000 s per live pair
+    # (absurdly slow — EWMA decay alone would need dozens of folds, and
+    # feedback placement would never give it the calls to fold)
+    fb._dev[1] = 1e3
+    fb._cls[1, :] = 1e3
+    for _ in range(12):                       # serve until a probe lands
+        assert set(svc.match(QUERIES[:8])) == want
+        if svc.stats["breaker_readmissions"]:
+            break
+    assert svc.stats["breaker_readmissions"] >= 1
+    for _ in range(3):                        # healthy traffic re-learns
+        assert set(svc.match(QUERIES[:8])) == want
+    assert not np.isnan(fb._dev[1])           # it DID get work again
+    # re-learned from real shard calls, not decayed off the outlier —
+    # without the reset this stays >= 1e3 * 0.65^folds >> 1
+    assert fb.rate(1) < 1.0
+
+
 def test_retry_after_tracks_remaining_cooldown():
     cooldown = 5.0
     svc = ERService(CORPUS, ServiceConfig(

@@ -5,6 +5,9 @@ circuit-broken and re-admitted after a probe succeeds, an exhausted
 request deadline or retry budget degrades to partial results with
 ``coverage < 1`` instead of failing, and a fully-broken service raises
 the typed :class:`ServiceUnavailable` with retry-after semantics."""
+import threading
+import time
+
 import numpy as np
 import pytest
 
@@ -130,6 +133,62 @@ def test_match_response_behaves_like_the_historical_set():
     empty = svc.match([])
     assert isinstance(empty, MatchResponse) and len(empty) == 0
     assert empty.coverage == 1.0 and not empty.degraded
+
+
+def test_oversized_request_spends_one_shared_deadline():
+    """REGRESSION (PR 8): ``match`` used to arm a FRESH request deadline
+    for every top-bucket slice of an oversized batch, so a k-slice
+    request under chaos could stall ~k deadlines before degrading. The
+    deadline is armed once at the outer entry now — all slices spend one
+    shared budget, and wall time is bounded by ~one deadline."""
+    deadline = 0.6
+    svc = ERService(CORPUS, _cfg(query_buckets=(8,), exec_devices=2,
+                                 request_deadline_s=deadline,
+                                 backoff_s=30.0,
+                                 breaker_threshold=10_000))
+    svc.warmup()                              # compiles outside the timer
+    # endless transient storm: every shard call fails, every retry wants
+    # a 30 s backoff — only the request deadline bounds the request
+    svc.set_fault_injector(FaultInjector(FaultScript(events=tuple(
+        FaultEvent("transient", d, 0) for d in (0, 1) for _ in range(400)),
+        n_dev=2)))
+    t0 = time.perf_counter()
+    resp = svc.match(QUERIES[:24])            # 3 slices of the 8-bucket
+    wall = time.perf_counter() - t0
+    assert resp.degraded and resp.coverage < 1.0
+    assert wall >= 0.5 * deadline             # the budget WAS spent once…
+    assert wall < 2.0 * deadline              # …not once per slice (≥ 3×)
+
+
+def test_concurrent_requests_equal_sequential_exactly():
+    """REGRESSION (PR 8): request-scoped state (deadline, supervised
+    reports) lived on the service instance, so overlapping requests from
+    different threads clobbered each other's budgets and coverage
+    accounting. It lives on a per-request context now: concurrent calls
+    return exactly the sequential match sets with clean metadata."""
+    batches = [QUERIES[:8], QUERIES[8:16], QUERIES[16:24], QUERIES[24:30]]
+    want = _quiet_answers(batches)
+    svc = ERService(CORPUS, _cfg(exec_devices=2))
+    errors = []
+
+    def worker(idx):
+        try:
+            for _ in range(5):
+                for batch, w in zip(batches[idx::2], want[idx::2]):
+                    resp = svc.match(batch)
+                    assert set(resp) == w
+                    assert resp.coverage == 1.0 and not resp.degraded
+        except BaseException as e:            # surfaced on the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert svc.stats["batches"] == 2 * 5 * 2
+    assert svc.stats["degraded"] == 0
 
 
 def test_supervised_refuses_mesh():
