@@ -1,0 +1,164 @@
+"""Tile-geometry autotuning: lattice sweep + occupancy model vs measured
+stage-1 throughput on the Fig. 9 skew workload.
+
+Two legs, both at the paper's robustness point s = 1.0 (block sizes
+|Φ_k| ∝ e^{−s·k}, the regime where a fixed 128×128 tile wastes most of
+its cells on small blocks):
+
+  * **lattice sweep** — lower the BlockSplit job once per VMEM-feasible
+    geometry in ``GEOMETRY_LATTICE``, score the identical feature matrix
+    through each catalog, and assert every geometry reproduces the EXACT
+    128×128 match set. Measured seconds feed a geometry-keyed
+    :class:`GeometryCostModel`; a second ``autotune`` pass with that
+    feedback must agree with the measured argmin.
+  * **service leg** — a resident :class:`ERService` with
+    ``autotune_tiles=True`` sweeps its (smaller) lattice during
+    ``warmup()``, pins the winner, and then serves steady-state traffic
+    with ZERO XLA compiles (the zero-steady-state-recompile contract
+    must survive geometry switching).
+
+Asserted invariants (the PR-9 autotuning contract):
+  * match-set equality across EVERY swept geometry (tile geometry is an
+    execution detail, never a semantics knob);
+  * the statically autotuned geometry is >= 1.2x stage-1 throughput over
+    the fixed 128×128 baseline at skew s=1.0;
+  * feedback-ranked autotune picks the measured-fastest geometry;
+  * 0 steady-state compiles after an autotuning warmup.
+
+    PYTHONPATH=src python -m benchmarks.tune_bench [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import compute_bdm, plan_block_split
+from repro.er import ERService, ServiceConfig, compile_counter
+from repro.er.blocking import exponential_block_ids
+from repro.er.compiler import (GeometryCostModel, autotune, lower,
+                               plan_to_job, score_catalog)
+
+from .common import print_table, save_rows, timer
+from .serve_bench import skewed_corpus
+
+SPEEDUP_BAR = 1.2          # autotuned vs fixed 128x128, stage-1 pairs/s
+BASELINE = (128, 128)
+
+
+def _skew_workload(n: int, d: int, r: int, m: int, s: float, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    bid = exponential_block_ids(n, b=100, s=s, rng=rng)
+    feats = rng.standard_normal((n, d)).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=1, keepdims=True)
+    order = np.argsort(bid, kind="stable")
+    feats, bid = feats[order], bid[order]
+    sizes = np.bincount(bid)
+    part = np.arange(n, dtype=np.int64) % m
+    bdm = compute_bdm(bid, part, int(sizes.shape[0]), m)
+    return feats, plan_to_job(plan_block_split(bdm, r))
+
+
+def _bench_geometry(feats, job, bm, bn, threshold, impl, repeats=2):
+    cat = lower(job, bm, bn)
+    score_catalog(feats, cat, threshold=threshold, impl=impl)   # compile
+    best = float("inf")
+    for _ in range(repeats):
+        with timer() as t:
+            ra, rb = score_catalog(feats, cat, threshold=threshold, impl=impl)
+        best = min(best, t.seconds)
+    matches = {(min(a, b), max(a, b)) for a, b in zip(ra.tolist(), rb.tolist())}
+    return best, matches
+
+
+def run(n: int = 8_000, d: int = 256, r: int = 100, m: int = 20,
+        svc_n: int = 4_000, quick: bool = False):
+    if quick:
+        n, svc_n = 3_000, 2_000
+    import jax
+    impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    threshold = 0.15
+    feats, job = _skew_workload(n, d, r, m, s=1.0)
+
+    # ---- leg 1: lattice sweep, match-set parity, 1.2x bar ----
+    report = autotune(job, d=d)           # static occupancy/waste ranking
+    feedback = GeometryCostModel()
+    rows, match_sets, seconds = [], {}, {}
+    for sc in report.scores:
+        secs, matches = _bench_geometry(
+            feats, job, sc.block_m, sc.block_n, threshold, impl)
+        seconds[sc.geometry] = secs
+        match_sets[sc.geometry] = matches
+        feedback.observe(sc.geometry, sc.live_pairs, secs)
+        rows.append({
+            "geometry": f"{sc.block_m}x{sc.block_n}",
+            "tiles": sc.tiles,
+            "occupancy": round(sc.occupancy, 3),
+            "waste_cells": sc.waste,
+            "model_cost": round(sc.model_cost, 0),
+            "seconds": round(secs, 4),
+            "mpairs_per_s": round(sc.live_pairs / secs / 1e6, 2),
+            "matches": len(matches),
+        })
+    base_set = match_sets[BASELINE]
+    for geom, matches in match_sets.items():
+        assert matches == base_set, \
+            f"geometry {geom} changed the match set vs {BASELINE}"
+
+    tuned = report.geometry
+    speedup = seconds[BASELINE] / seconds[tuned]
+    refit = autotune(job, d=d, feedback=feedback)
+    measured_best = min(seconds, key=seconds.get)
+    rows.sort(key=lambda r: r["seconds"])
+    meta = {
+        "n": n, "d": d, "skew_s": 1.0, "impl": impl,
+        "autotuned": f"{tuned[0]}x{tuned[1]}",
+        "speedup_vs_128": round(speedup, 2),
+        "feedback_pick": f"{refit.geometry[0]}x{refit.geometry[1]}",
+        "measured_best": f"{measured_best[0]}x{measured_best[1]}",
+    }
+    print_table(f"tune_bench — lattice sweep, Fig. 9 skew s=1.0 "
+                f"(n={n}, d={d}, impl={impl})", rows)
+    print("meta:", meta)
+    assert speedup >= SPEEDUP_BAR, \
+        f"autotuned {tuned} only {speedup:.2f}x vs fixed 128x128 " \
+        f"(bar {SPEEDUP_BAR}x)"
+    assert refit.geometry == measured_best, \
+        f"feedback autotune picked {refit.geometry}, " \
+        f"measured best was {measured_best}"
+
+    # ---- leg 2: service autotune warmup, zero steady compiles ----
+    titles, rng = skewed_corpus(svc_n, b=100, s=1.0)
+    lattice = ((32, 32), (64, 64), (128, 128))
+    cfg = ServiceConfig(feature_dim=128, max_len=48, r=32, m=8,
+                        query_buckets=(8, 32), tile_chunk=256,
+                        autotune_tiles=True, autotune_lattice=lattice)
+    svc = ERService(titles, cfg)
+    with compile_counter() as warm, timer() as t_warm:
+        svc.warmup()
+    with compile_counter() as steady, timer() as t_steady:
+        nq = 0
+        for _ in range(8):
+            qs = [titles[int(rng.integers(0, len(titles)))] for _ in range(8)]
+            svc.match(qs)
+            nq += len(qs)
+    svc_row = {
+        "geometry": f"{svc.tile_geometry[0]}x{svc.tile_geometry[1]}",
+        "lattice": len(lattice),
+        "warmup_s": round(t_warm.seconds, 2),
+        "warmup_compiles": warm.count,
+        "steady_compiles": steady.count,
+        "queries_per_s": round(nq / max(t_steady.seconds, 1e-9), 1),
+    }
+    print_table(f"tune_bench — ERService autotune warmup (n={svc_n})",
+                [svc_row])
+    assert steady.count == 0, \
+        f"steady-state recompiles after autotuning warmup: {steady.count}"
+
+    save_rows("tune_bench", [dict(r, **meta) for r in rows]
+              + [dict(svc_row, leg="service")])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--smoke" in sys.argv)

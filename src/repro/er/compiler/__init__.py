@@ -70,7 +70,15 @@ from .feedback import (  # noqa: F401
     N_TILE_CLASSES,
     TILE_CLASS_NAMES,
     EwmaCostModel,
+    GeometryCostModel,
     tile_class,
+)
+from .tune import (  # noqa: F401
+    GEOMETRY_LATTICE,
+    GeometryScore,
+    TuneReport,
+    autotune,
+    catalog_occupancy,
 )
 from .faults import (  # noqa: F401
     FAULT_KINDS,

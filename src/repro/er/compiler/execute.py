@@ -39,6 +39,7 @@ from .schedule import (NoHealthyDevicesError, Schedule, schedule_tiles,
                        tile_costs, tiles_for_devices)
 
 __all__ = [
+    "CatalogScorer",
     "execute",
     "execute_supervised",
     "make_scorer",
@@ -76,6 +77,15 @@ def _resolve_impl(impl: str) -> str:
         # backend the batched-matmul XLA path IS the production path.
         return "pallas" if jax.default_backend() == "tpu" else "xla"
     return impl
+
+
+def _compact_on_device(impl: str) -> bool:
+    """True when ``impl`` is a compiled backend whose on-device packing
+    epilogue beats a host mask scan. Interpret mode emulates the kernel
+    in Python — the one-hot packing epilogue is O(bm·bn·capacity) numpy
+    per tile there, so the dense mask (+ np.nonzero) is the honest path."""
+    return impl == "xla" or (impl == "pallas"
+                             and jax.default_backend() == "tpu")
 
 
 def _pad_pow2(t: int, cap: int) -> int:
@@ -149,12 +159,7 @@ def score_catalog(feats_a, catalog: TileCatalog, feats_b=None, *,
     tiles = catalog.tiles
     bm, bn = catalog.block_m, catalog.block_n
     t_total = tiles.shape[0]
-    # Interpret mode emulates the kernel in Python — the one-hot packing
-    # epilogue is O(bm·bn·capacity) numpy per tile there, so the dense
-    # mask is the honest path; compiled backends take the epilogue.
-    on_device = impl == "xla" or (impl == "pallas"
-                                  and jax.default_backend() == "tpu")
-    use_compact = compact and on_device
+    use_compact = compact and _compact_on_device(impl)
     capacity = compact_capacity if compact_capacity is not None else bm * bn
     out_a, out_b = [], []
     for lo in range(0, t_total, chunk_tiles):
@@ -196,9 +201,37 @@ def score_catalog(feats_a, catalog: TileCatalog, feats_b=None, *,
 # Mesh stage 1
 # ---------------------------------------------------------------------------
 
+class CatalogScorer:
+    """A jitted per-shard scorer plus the metadata
+    :func:`_score_and_compact` needs to decode its output. ``compact``
+    scorers return (packed, counts) from the kernel's on-device
+    compaction epilogue; mask scorers return dense survivor masks.
+    Callable like the bare jitted function (jit identity is preserved —
+    the wrapped function is created exactly once), with a lazily built
+    mask twin for the exact-fallback path on capacity overflow."""
+
+    def __init__(self, fn, *, compact: bool, capacity: int, mask_factory):
+        self._fn = fn
+        self.compact = compact
+        self.capacity = capacity
+        self._mask_factory = mask_factory
+        self._mask_twin = None
+
+    def __call__(self, *operands):
+        return self._fn(*operands)
+
+    def mask_twin(self) -> "CatalogScorer":
+        """The dense-mask scorer with identical routing — built (and
+        jitted) only if an overflow ever forces the exact fallback."""
+        if self._mask_twin is None:
+            self._mask_twin = self._mask_factory()
+        return self._mask_twin
+
+
 def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
                 threshold: float, block_m: int = 128, block_n: int = 128,
-                impl: str = "xla", halo: int = 0):
+                impl: str = "xla", halo: int = 0, compact: bool = False,
+                capacity: Optional[int] = None) -> CatalogScorer:
     """Build ONE jitted per-shard catalog scorer for the given data flow.
 
     mode="self":  scorer(feats_sharded, tiles_chunk)
@@ -207,18 +240,32 @@ def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
                   of ``halo`` boundary rows instead of an all-gather;
                   tiles index the [local ‖ halo] strip.
 
-    Each returns (n_dev, chunk, bm, bn) survivor masks. Build it once per
-    resident service / driver and reuse it: jit caches by the wrapped
-    function's identity, so a per-call closure would retrace every batch.
+    Each returns (n_dev, chunk, bm, bn) survivor masks — or, with
+    ``compact=True`` (compiled backends only; see
+    :func:`_compact_on_device`), (n_dev, chunk, capacity) packed slot
+    ids + (n_dev, chunk, 1) exact counts from the kernel's on-device
+    compaction epilogue, so the host decode is O(survivors) with no
+    ``np.nonzero``. ``capacity`` defaults to bm·bn, which can never
+    overflow. Build the scorer once per resident service / driver and
+    reuse it: jit caches by the wrapped function's identity, so a
+    per-call closure would retrace every batch.
     """
     from ...kernels import ops
 
+    cap = capacity if capacity is not None else block_m * block_n
+
     def _score(a, b, tiles_l):
+        if compact:
+            packed, counts = ops.pair_scores_catalog_compact(
+                a, b, tiles_l[0], threshold=threshold,
+                block_m=block_m, block_n=block_n, capacity=cap, impl=impl)
+            return packed[None], counts[None]
         mask = ops.pair_scores_catalog(
             a, b, tiles_l[0], threshold=threshold,
             block_m=block_m, block_n=block_n, impl=impl)
         return mask[None]
 
+    out_specs = (P(axis), P(axis)) if compact else P(axis)
     if mode == "self":
         def job2(feats_l, tiles_l):
             feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
@@ -244,7 +291,14 @@ def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
     else:
         raise ValueError(f"unknown scorer mode {mode!r}")
 
-    return jax.jit(_smap(job2, mesh, in_specs=in_specs, out_specs=P(axis)))
+    fn = jax.jit(_smap(job2, mesh, in_specs=in_specs, out_specs=out_specs))
+    mask_factory = (
+        (lambda: make_scorer(mesh, axis, mode=mode, threshold=threshold,
+                             block_m=block_m, block_n=block_n, impl=impl,
+                             halo=halo, compact=False))
+        if compact else (lambda: None))
+    return CatalogScorer(fn, compact=compact, capacity=cap,
+                         mask_factory=mask_factory)
 
 
 def _score_and_compact(shard, operands, tiles_dev, chunk: int,
@@ -252,16 +306,43 @@ def _score_and_compact(shard, operands, tiles_dev, chunk: int,
                        base: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """Drive a jitted per-shard catalog scorer chunk by chunk and compact
-    each chunk's (n_dev, chunk, bm, bn) survivor masks into global
-    (rows_a, rows_b) — host memory stays O(n_dev · chunk · bm · bn)
-    regardless of plan size. ``base`` (n_dev,) shifts device-local tile
+    each chunk's output into global (rows_a, rows_b) — host memory stays
+    O(n_dev · chunk · bm · bn) regardless of plan size.
+
+    Compact scorers (:class:`CatalogScorer` with ``compact=True``, the
+    default on compiled backends) decode the kernel's packed survivor
+    slots per device — O(survivors) host work, no ``np.nonzero``; a tile
+    whose exact count exceeds the capacity (only possible with a
+    user-bounded capacity) re-scores that chunk through the lazily built
+    mask twin, exactness over speed. Both paths are counted in
+    ``stage1_stats``. ``base`` (n_dev,) shifts device-local tile
     coordinates to global rows (the RepSN local-coordinate path); None
     means the tiles already carry global strip indices."""
     cap = tiles_dev.shape[1]
+    is_compact = getattr(shard, "compact", False)
     out_a, out_b = [], []
     for lo in range(0, cap, chunk):
         part = tiles_dev[:, lo:lo + chunk]
-        masks = np.asarray(shard(*operands, jnp.asarray(part)))
+        masks = None
+        if is_compact:
+            packed, counts = shard(*operands, jnp.asarray(part))
+            counts = np.asarray(counts)[..., 0].astype(np.int64)  # (n_dev, C)
+            if counts.max(initial=0) <= shard.capacity:
+                stage1_stats["compact_decodes"] += 1
+                packed = np.asarray(packed)
+                for dd in range(part.shape[0]):
+                    ra, rb = _decode_packed(packed[dd], counts[dd],
+                                            part[dd], bm, bn)
+                    off = base[dd] if base is not None else 0
+                    out_a.append(off + ra)
+                    out_b.append(off + rb)
+                continue
+            stage1_stats["compact_overflows"] += 1
+            masks = np.asarray(shard.mask_twin()(*operands,
+                                                 jnp.asarray(part)))
+        if masks is None:
+            masks = np.asarray(shard(*operands, jnp.asarray(part)))
+        stage1_stats["nonzero_decodes"] += 1
         d, ti, ii, jj = np.nonzero(masks)
         off = base[d] if base is not None else 0
         out_a.append(off + part[d, ti, A_TILE].astype(np.int64) * bm + ii)
@@ -318,9 +399,11 @@ def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
     if scorer is None:
         mode = "halo" if halo > 0 else ("cross" if feats_b is not None
                                         else "self")
+        rimpl = _resolve_impl(impl)
         scorer = make_scorer(mesh, axis, mode=mode, threshold=threshold,
-                             block_m=bm, block_n=bn,
-                             impl=_resolve_impl(impl), halo=halo)
+                             block_m=bm, block_n=bn, impl=rimpl, halo=halo,
+                             compact=compact and _compact_on_device(rimpl),
+                             capacity=compact_capacity)
     operands = ((feats_a,) if feats_b is None
                 else (feats_a, jnp.asarray(feats_b)))
     return _score_and_compact(scorer, operands, tiles_dev, chunk, bm, bn,

@@ -49,6 +49,7 @@ __all__ = [
     "TILE_CLASS_NAMES",
     "tile_class",
     "EwmaCostModel",
+    "GeometryCostModel",
 ]
 
 TILE_CLASS_NAMES = ("rect", "tri", "band", "cut")
@@ -191,3 +192,115 @@ class EwmaCostModel:
         by_class = np.bincount(classes, weights=costs,
                                minlength=N_TILE_CLASSES)
         return self.predict(device, by_class)
+
+    # -- persistence -----------------------------------------------------
+
+    def to_state(self) -> dict:
+        """Snapshot the learned rates as a plain JSON-able dict, so a
+        restarted service warm-starts its scheduler instead of relearning
+        the fleet from the prior (``ERService.export_feedback_state``)."""
+        return {
+            "version": 1,
+            "n_dev": self.n_dev,
+            "alpha": self.alpha,
+            "prior_rate": self.prior_rate,
+            "observations": self.observations,
+            "global": self._global,
+            "dev": [None if math.isnan(v) else float(v)
+                    for v in self._dev],
+            "cls": [[None if math.isnan(v) else float(v) for v in row]
+                    for row in self._cls],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "EwmaCostModel":
+        """Rebuild a model from :meth:`to_state` output. Exact
+        round-trip: ``from_state(m.to_state())`` predicts identically to
+        ``m`` and keeps folding observations with the same alpha."""
+        if state.get("version") != 1:
+            raise ValueError(f"unknown EwmaCostModel state version: "
+                             f"{state.get('version')!r}")
+        m = cls(int(state["n_dev"]), alpha=float(state["alpha"]),
+                prior_rate=float(state["prior_rate"]))
+        m.observations = int(state["observations"])
+        m._global = float(state["global"])
+        m._dev = np.asarray(
+            [np.nan if v is None else v for v in state["dev"]], np.float64)
+        m._cls = np.asarray(
+            [[np.nan if v is None else v for v in row]
+             for row in state["cls"]], np.float64)
+        if m._dev.shape != (m.n_dev,) or m._cls.shape != (m.n_dev,
+                                                          N_TILE_CLASSES):
+            raise ValueError("EwmaCostModel state shape mismatch")
+        return m
+
+
+class GeometryCostModel:
+    """Geometry-keyed EWMA of measured seconds-per-live-pair, the online
+    half of the tile-geometry autotuner (er/compiler/tune.py).
+
+    A catalog's *live pair count* is geometry-invariant (it is the
+    plan's pair total — only the dead padding around those pairs changes
+    with (block_m, block_n)), so seconds-per-live-pair measured under
+    different geometries rank the geometries directly: the one that
+    wastes the least MXU time per useful pair wins. ``observe()`` folds
+    one measured sweep leg or serving batch; ``rate()`` falls back to
+    NaN for unmeasured geometries (the static occupancy model keeps
+    ranking those); ``best()`` returns the measured argmin.
+    """
+
+    def __init__(self, alpha: float = 0.35):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = float(alpha)
+        self.observations = 0
+        self._rate: dict = {}          # (block_m, block_n) -> EWMA s/pair
+
+    def observe(self, geometry, live_pairs: float, seconds: float) -> None:
+        """Fold one measured stage-1 call at ``geometry`` over a catalog
+        with ``live_pairs`` exact live pairs taking ``seconds`` wall."""
+        key = (int(geometry[0]), int(geometry[1]))
+        if live_pairs <= 0 or seconds < 0:
+            return
+        new = max(float(seconds), 1e-9) / float(live_pairs)
+        old = self._rate.get(key)
+        self._rate[key] = new if old is None else (
+            (1.0 - self.alpha) * old + self.alpha * new)
+        self.observations += 1
+
+    def rate(self, geometry) -> float:
+        """EWMA seconds per live pair at ``geometry``; NaN if unmeasured."""
+        return self._rate.get((int(geometry[0]), int(geometry[1])),
+                              float("nan"))
+
+    def best(self, candidates=None):
+        """Measured-best geometry among ``candidates`` (default: every
+        measured geometry); None when nothing relevant is measured."""
+        pool = (self._rate if candidates is None
+                else {k: self._rate[k] for k in
+                      ((int(g[0]), int(g[1])) for g in candidates)
+                      if k in self._rate})
+        if not pool:
+            return None
+        return min(pool, key=pool.get)
+
+    def to_state(self) -> dict:
+        """JSON-able snapshot (same restart story as
+        :meth:`EwmaCostModel.to_state`)."""
+        return {
+            "version": 1,
+            "alpha": self.alpha,
+            "observations": self.observations,
+            "rates": [[k[0], k[1], v] for k, v in sorted(self._rate.items())],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "GeometryCostModel":
+        if state.get("version") != 1:
+            raise ValueError(f"unknown GeometryCostModel state version: "
+                             f"{state.get('version')!r}")
+        m = cls(alpha=float(state["alpha"]))
+        m.observations = int(state["observations"])
+        m._rate = {(int(bm), int(bn)): float(v)
+                   for bm, bn, v in state["rates"]}
+        return m

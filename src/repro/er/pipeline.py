@@ -52,9 +52,10 @@ from ..core.sorted_neighborhood import (
 from ..core.two_source import TwoSourceBDM, plan_pair_range_2src, pairs_of_range_2src
 from .blocking import prefix_block_ids, sn_sort_order
 from .encode import encode_titles, ngram_features
-from .compiler import (apply_schedule, cross_job, enumerate_task_pairs,
-                       execute_supervised, lower, match_catalog, plan_to_job,
-                       schedule_tiles, verify_pairs)
+from .compiler import (apply_schedule, autotune, cross_job,
+                       enumerate_task_pairs, execute_supervised, lower,
+                       match_catalog, plan_to_job, schedule_tiles,
+                       verify_pairs)
 
 __all__ = ["ERConfig", "ERResult", "run_er", "featurize", "cross_restrict"]
 
@@ -96,6 +97,9 @@ class ERConfig:
     executor: str = "catalog"          # catalog | reference
     block_m: int = 128                 # catalog tile rows (MXU-aligned)
     block_n: int = 128                 # catalog tile cols
+    tune_tiles: bool = False           # pick (block_m, block_n) per job
+                                       # via compiler.autotune (catalog
+                                       # executor; overrides block_m/n)
     kernel_impl: str = "auto"          # auto | pallas | interpret | xla
     schedule_policy: str = "cost_lpt"  # cost_lpt | round_robin
     # ---- fault-tolerant execution (catalog executor only) ----
@@ -349,13 +353,25 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
         measured_makespan += rep.measured_makespan_s
         return ca, cb
 
+    def _geometry(job) -> Tuple[int, int]:
+        """Per-job tile geometry: the occupancy autotuner's pick when
+        ``cfg.tune_tiles``, else the configured (block_m, block_n)."""
+        if not cfg.tune_tiles:
+            return cfg.block_m, cfg.block_n
+        rep = autotune(job, d=cfg.feature_dim,
+                       capacity=cfg.compact_capacity or 0)
+        extra.setdefault("tuned_geometry", {})[
+            f"job{len(extra['tuned_geometry'])}"] = rep.geometry
+        return rep.geometry
+
     if cfg.executor == "catalog":
         # The compiler pipeline: lower the plan to MXU tiles, place tiles
         # by exact live-pair cost (LPT), score them all on the kernel,
         # verify compacted survivors. Wall time is attributed to reducers
         # by planned load (the paper's balance metric), since no
         # per-reducer loop exists anymore.
-        catalog = lower(plan_to_job(plan), cfg.block_m, cfg.block_n)
+        job = plan_to_job(plan)
+        catalog = lower(job, *_geometry(job))
         extra["catalog_tiles"] = catalog.num_tiles
         sched = schedule_tiles(catalog, policy=cfg.schedule_policy)
         sched_report = sched.stats()
@@ -397,8 +413,8 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
         plan2 = plan_pair_range_2src(bdm2, cfg.r)
         extra["null_key_pairs"] = plan2.total_pairs
         if cfg.executor == "catalog":
-            cross = lower(cross_job(n, int(null_idx.size), cfg.r),
-                          cfg.block_m, cfg.block_n)
+            xjob = cross_job(n, int(null_idx.size), cfg.r)
+            cross = lower(xjob, *_geometry(xjob))
             if supervised:
                 ca, cb = _supervised_stage1(cross, feats, feats[null_idx])
                 ha, hb = verify_pairs(codes, lens, codes[null_idx],

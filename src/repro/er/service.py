@@ -55,12 +55,13 @@ from ..core import blocked_layout, compute_bdm, entity_indices, update_bdm
 from ..core.two_source import (TwoSourceBDM, plan_block_split_2src,
                                plan_pair_range_2src)
 from .blocking import prefix_key
-from .compiler import (DeviceKilledError, EwmaCostModel,
-                       NoHealthyDevicesError, RecoveryFailedError,
-                       SupervisedReport, TransientScorerError, cross_job,
+from .compiler import (GEOMETRY_LATTICE, DeviceKilledError, EwmaCostModel,
+                       GeometryCostModel, NoHealthyDevicesError,
+                       RecoveryFailedError, SupervisedReport,
+                       TransientScorerError, TuneReport, autotune, cross_job,
                        execute, execute_supervised, lower, make_scorer,
                        pad_catalog, plan_to_job, schedule_tiles, verify_pairs)
-from .compiler.execute import _resolve_impl
+from .compiler.execute import _compact_on_device, _resolve_impl
 from .compiler.faults import FaultInjector
 from .pipeline import featurize
 
@@ -274,6 +275,13 @@ class ServiceConfig:
     steal_factor: Optional[float] = None  # > 0: mid-stream work stealing
     steal_quantum: Optional[int] = None   # tiles per dispatch batch
     feedback_alpha: float = 0.35          # EWMA smoothing factor
+    feedback_state: Optional[dict] = None  # export_feedback_state() of a
+                                           # previous process: warm-starts
+                                           # the EWMA + geometry models
+    # ---- tile-geometry autotuning (DESIGN.md §Autotuning) ----
+    autotune_tiles: bool = False          # warmup sweeps the lattice and
+                                          # pins the winning (bm, bn)
+    autotune_lattice: Tuple[Tuple[int, int], ...] = GEOMETRY_LATTICE
 
 
 class ERService:
@@ -301,11 +309,26 @@ class ERService:
         self._n_exec = max(cfg.exec_devices, 1)
         # ONE EWMA model for the service's lifetime: steady-state serving
         # self-tunes — every request's shard timings calibrate the next
-        # request's schedule.
-        self.feedback: Optional[EwmaCostModel] = (
-            EwmaCostModel(self._n_exec, alpha=cfg.feedback_alpha)
-            if cfg.feedback_scheduling or cfg.steal_factor is not None
-            else None)
+        # request's schedule. A previous process's exported state seeds
+        # it, so a restarted service schedules from measured rates
+        # instead of relearning the fleet from the prior.
+        seed_state = cfg.feedback_state or {}
+        self.feedback: Optional[EwmaCostModel] = None
+        if (cfg.feedback_scheduling or cfg.steal_factor is not None
+                or "ewma" in seed_state):
+            ewma = seed_state.get("ewma")
+            if ewma is not None and int(ewma.get("n_dev", -1)) == self._n_exec:
+                self.feedback = EwmaCostModel.from_state(ewma)
+            else:
+                # No snapshot, or one from a different fleet topology —
+                # rates keyed to other devices would mis-calibrate.
+                self.feedback = EwmaCostModel(self._n_exec,
+                                              alpha=cfg.feedback_alpha)
+        self.geometry_feedback = (
+            GeometryCostModel.from_state(seed_state["geometry"])
+            if "geometry" in seed_state
+            else GeometryCostModel(alpha=cfg.feedback_alpha))
+        self.tune_report: Optional[TuneReport] = None
         self.fault_injector: Optional[FaultInjector] = None
         self._fail_streak = np.zeros(self._n_exec, np.int64)
         self._breaker_open: Dict[int, float] = {}   # device → eviction time
@@ -363,15 +386,44 @@ class ERService:
                             "breaker_readmissions": 0,
                             "steals": 0, "stolen_tiles": 0}
 
+        # The served tile geometry: cfg.block_m/n until the autotuning
+        # warmup pins a lattice winner. Static kernel args everywhere,
+        # so each geometry is one compile-cache family.
+        self._block_m = cfg.block_m
+        self._block_n = cfg.block_n
         self._dist_scorer = None
-        if mesh is not None:
-            # ONE jitted cross-mode scorer for the service's lifetime —
-            # jit caches by function identity, so a per-batch closure
-            # would retrace every call (the recompile-guard failure mode).
-            self._dist_scorer = make_scorer(
-                mesh, axis, mode="cross", threshold=self._stage1,
-                block_m=cfg.block_m, block_n=cfg.block_n,
-                impl=_resolve_impl(cfg.kernel_impl))
+        self._build_dist_scorer()
+
+    def _build_dist_scorer(self):
+        """(Re)build the mesh cross-mode scorer at the current pinned
+        geometry. ONE jitted scorer per geometry for the service's
+        lifetime — jit caches by function identity, so a per-batch
+        closure would retrace every call (the recompile-guard failure
+        mode). Called at construction and on an autotune re-pin (at most
+        |lattice| times, all during warmup). Compiled backends get the
+        compact scorer: packed-slot decode, no host ``np.nonzero``."""
+        if self.mesh is None:
+            return
+        cfg = self.cfg
+        rimpl = _resolve_impl(cfg.kernel_impl)
+        self._dist_scorer = make_scorer(
+            self.mesh, self.axis, mode="cross", threshold=self._stage1,
+            block_m=self._block_m, block_n=self._block_n, impl=rimpl,
+            compact=_compact_on_device(rimpl),
+            capacity=cfg.compact_capacity)
+
+    def _set_geometry(self, block_m: int, block_n: int):
+        """Pin a served tile geometry (autotune warmup only)."""
+        if (block_m, block_n) == (self._block_m, self._block_n):
+            return
+        self._block_m = int(block_m)
+        self._block_n = int(block_n)
+        self._build_dist_scorer()
+
+    @property
+    def tile_geometry(self) -> Tuple[int, int]:
+        """The (block_m, block_n) the service currently serves at."""
+        return (self._block_m, self._block_n)
 
     # ------------------------------------------------------------------
     # Blocking-key vocabulary (persistent across corpus and all batches)
@@ -691,7 +743,7 @@ class ERService:
                 jobs.append(_PlannedJob(
                     feats_a=self._feats_keyed,
                     catalog=lower(plan_to_job(plan),
-                                  cfg.block_m, cfg.block_n),
+                                  self._block_m, self._block_n),
                     q_buf=self._bucket_buffer(feats[q_rows], bucket),
                     codes_a=self._k_codes, lens_a=self._k_lens,
                     codes_b=codes[q_rows], lens_b=lens[q_rows],
@@ -701,7 +753,7 @@ class ERService:
             null_q = np.flatnonzero(qb < 0)
             if cfg.match_missing_keys and null_q.size:
                 cat = lower(cross_job(self.n_corpus, int(null_q.size),
-                                      cfg.r), cfg.block_m, cfg.block_n)
+                                      cfg.r), self._block_m, self._block_n)
                 planned += cat.total_pairs
                 jobs.append(_PlannedJob(
                     feats_a=self._feats_all, catalog=cat,
@@ -717,7 +769,7 @@ class ERService:
                     and keyed_q.size:
                 cat = lower(cross_job(int(self._null_idx.size),
                                       int(keyed_q.size), cfg.r),
-                            cfg.block_m, cfg.block_n)
+                            self._block_m, self._block_n)
                 planned += cat.total_pairs
                 jobs.append(_PlannedJob(
                     feats_a=self._feats_null, catalog=cat,
@@ -772,17 +824,85 @@ class ERService:
         one synthetic batch per bucket, built from recycled corpus titles
         (guaranteed stage-1 survivors, so the stage-2 verifier compiles
         too) with one empty title appended to hit the null-key cross
-        jobs. Warmup batches are excluded from ``stats``."""
+        jobs. Warmup batches are excluded from ``stats``.
+
+        With ``cfg.autotune_tiles`` the top-bucket batch first sweeps the
+        geometry lattice (compiling ≤ |lattice| kernel variants, each
+        measured once into the geometry EWMA) and pins the winner; every
+        bucket then warms at the pinned geometry, so steady-state
+        serving still triggers ZERO new compilations. A restarted
+        service whose ``cfg.feedback_state`` already carries measured
+        lattice rates skips the sweep and pins directly."""
         if self.n_corpus == 0:
             return 0
         reps = -(-self._buckets[-1] // self.n_corpus)
         pool = self._titles * reps
+        if self.cfg.autotune_tiles:
+            self._autotune_warmup(pool)
         for bucket in self._buckets:
             qs = pool[:bucket]
             if self.cfg.match_missing_keys and qs:
                 qs = qs[:-1] + [""]
             self.match(qs, _record=False)
         return len(self._buckets)
+
+    def _tune_job(self, titles: List[str]):
+        """The keyed two-source MatchJob a batch of ``titles`` would
+        plan — the representative job the autotuner scores. Mirrors the
+        keyed branch of :meth:`_plan_batch` without lowering."""
+        cfg = self.cfg
+        with self._host_lock:
+            qb = self._query_block_ids(titles, record=False)
+        keyed = qb[qb >= 0]
+        if keyed.size == 0:
+            return None
+        bdm_s = np.bincount(
+            keyed, minlength=self._bdm.shape[0]).astype(np.int64)[:, None]
+        bdm2 = TwoSourceBDM(bdm_r=self._bdm, bdm_s=bdm_s)
+        planner = (plan_block_split_2src if cfg.strategy == "block_split"
+                   else plan_pair_range_2src)
+        return plan_to_job(planner(bdm2, cfg.r))
+
+    def _autotune_warmup(self, pool: List[str]):
+        """Sweep the lattice on the top-bucket synthetic batch, fold each
+        candidate's wall time into the geometry EWMA, pin the winner.
+        Skips straight to pinning when the seeded geometry model already
+        measured a lattice candidate (restart warm start)."""
+        cfg = self.cfg
+        qs = pool[:self._buckets[-1]]
+        job = self._tune_job(qs)
+        if job is None or job.total_pairs == 0:
+            return
+        kwargs = dict(lattice=cfg.autotune_lattice, d=cfg.feature_dim,
+                      capacity=cfg.compact_capacity or 0,
+                      feedback=self.geometry_feedback)
+        if self.geometry_feedback.best(cfg.autotune_lattice) is None:
+            report = autotune(job, **kwargs)
+            for score in report.scores:
+                self._set_geometry(score.block_m, score.block_n)
+                t0 = time.perf_counter()
+                self.match(qs, _record=False)
+                # live_pairs: the keyed job's exact planned pairs — the
+                # geometry-invariant denominator that makes measured
+                # rates directly comparable across candidates.
+                self.geometry_feedback.observe(
+                    score.geometry, max(job.total_pairs, 1),
+                    time.perf_counter() - t0)
+        self.tune_report = autotune(job, **kwargs)
+        self._set_geometry(self.tune_report.block_m,
+                           self.tune_report.block_n)
+
+    def export_feedback_state(self) -> dict:
+        """Snapshot every learned model (device/class EWMA rates, the
+        geometry EWMA, the pinned geometry) as one JSON-able dict. Hand
+        it to a new process as ``ServiceConfig.feedback_state`` and the
+        restarted service schedules — and autotunes — from measurements
+        instead of cold priors."""
+        state: Dict = {"geometry_pinned": [self._block_m, self._block_n]}
+        if self.feedback is not None:
+            state["ewma"] = self.feedback.to_state()
+        state["geometry"] = self.geometry_feedback.to_state()
+        return state
 
     # ------------------------------------------------------------------
     # Introspection

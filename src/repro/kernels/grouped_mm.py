@@ -64,8 +64,13 @@ def grouped_matmul(x, tile_expert, w, *, block_t: int = 128,
     return out[:, :f]
 
 
-def pltpu_prefetch(grid_spec: pl.GridSpec, num_scalar_prefetch: int):
-    """Build a PrefetchScalarGridSpec from a plain GridSpec."""
+def pltpu_prefetch(grid_spec: pl.GridSpec, num_scalar_prefetch: int,
+                   scratch_shapes=None):
+    """Build a PrefetchScalarGridSpec from a plain GridSpec.
+
+    ``scratch_shapes`` (e.g. ``pltpu.VMEM`` buffers and DMA semaphores
+    for manual double-buffered strip copies) pass through verbatim.
+    """
     from jax.experimental.pallas import tpu as pltpu
 
     return pltpu.PrefetchScalarGridSpec(
@@ -73,6 +78,7 @@ def pltpu_prefetch(grid_spec: pl.GridSpec, num_scalar_prefetch: int):
         grid=grid_spec.grid,
         in_specs=grid_spec.in_specs,
         out_specs=grid_spec.out_specs,
+        scratch_shapes=tuple(scratch_shapes or ()),
     )
 
 

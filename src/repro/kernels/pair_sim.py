@@ -6,14 +6,29 @@ A match task (BlockSplit tile or PairRange range segment) reduces to
 scoring A @ Bᵀ over two strips of the entity-feature matrix — pure MXU
 work once titles are encoded as L2-normalized n-gram vectors
 (er/encode.py). The kernel tiles (M, N) into (block_m, block_n) MXU-
-aligned tiles; each grid step keeps one (block_m, d) LHS strip and one
-(d, block_n) RHS strip in VMEM, computes the dot, applies the threshold,
-and optionally the x < y upper-triangular mask (intra-block tasks, k.i /
-unsplit blocks) via global row/col indices derived from program_id.
+aligned tiles chosen from the autotuning lattice ``GEOMETRY_LATTICE``
+(er/compiler/tune.py picks per-catalog geometry from the block-size
+histogram); each grid step keeps one (block_m, d) LHS strip and one
+(block_n, d) RHS strip in VMEM, computes the dot, applies the threshold,
+and the entry's validity window / triangular mask / corner cuts via
+global row/col indices.
 
-VMEM per step (f32, d=256, 128×128 tiles): 128·256·4 × 2 + 128·128·4
-≈ 320 KiB — far under the ~16 MiB/core budget; block sizes are exposed
-for the §Perf sweep.
+The catalog kernels stream their strips through *double-buffered* manual
+DMA: inputs stay in HBM (``memory_space=ANY``); two-deep VMEM strip
+buffers prefetch tile t+1's LHS/RHS strips while tile t computes, so the
+strip copy-in overlaps the MXU work instead of serializing ahead of it.
+
+VMEM per step, double-buffered (f32, d feature dim):
+  strips   2 · (bm + bn) · d · 4 B          (two slots each side)
+  compute  ≈ 4 · bm · bn · 4 B              (scores, mask, dest, flat)
+  epilogue (compact only)
+           (bm² + bn² + capacity · bn + capacity) · 4 B
+Worst lattice candidate (bm = bn = 256, d = 256, capacity = 1024):
+  2·(512)·256·4 ≈ 1.0 MiB strips + 1.0 MiB compute + 1.3 MiB epilogue
+  ≈ 3.3 MiB — under the ``VMEM_BUDGET_BYTES`` bound asserted at lowering
+time by :func:`check_vmem` (the ~16 MiB/core physical budget minus
+headroom for compiler temporaries). :func:`catalog_vmem_bytes` is the
+shared model; er/compiler/tune.py filters lattice candidates with it.
 
 Two entry points:
   * :func:`pair_scores` — dense (M, N) scoring of two full matrices
@@ -22,8 +37,8 @@ Two entry points:
   * :func:`pair_scores_catalog` — the *tile-catalog* variant driving the
     fused plan executor (er/executor.py, DESIGN.md §Catalog): the grid is
     one-dimensional over catalog entries; a scalar-prefetch operand (the
-    catalog, SMEM) feeds the BlockSpec index_maps so each grid step pulls
-    the two feature strips named by the current entry — the same pattern
+    catalog, SMEM) feeds the strip DMAs so each grid step pulls the two
+    feature strips named by the current entry — the same pattern
     grouped_mm.py uses for expert tiles. The kernel applies the entry's
     validity window, triangular mask and PairRange corner cuts in-kernel
     and writes a per-tile survivor mask; the host compacts survivors and
@@ -38,7 +53,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["pair_scores", "pair_scores_catalog",
-           "pair_scores_catalog_compact", "catalog_tile_mask", "NCOLS"]
+           "pair_scores_catalog_compact", "catalog_tile_mask", "NCOLS",
+           "GEOMETRY_LATTICE", "VMEM_BUDGET_BYTES", "catalog_vmem_bytes",
+           "check_vmem"]
 
 # Catalog entry layout (int32 columns) — shared with er/executor.py and
 # kernels/ref.py. Rows/cols below are *global* row indices of the feature
@@ -55,6 +72,44 @@ __all__ = ["pair_scores", "pair_scores_catalog",
 #              window-w diagonal band, band = w; 0 = unconstrained)
 #  12 reducer  owning reduce task (host-side attribution / device routing)
 NCOLS = 13
+
+# MXU-aligned (block_m, block_n) candidates the tile-geometry autotuner
+# (er/compiler/tune.py) sweeps. Finite and static: a resident service
+# compiles at most |lattice| kernel variants during warmup, then pins
+# the winner — the zero-steady-state-recompile contract holds.
+GEOMETRY_LATTICE = ((32, 32), (32, 64), (32, 128), (32, 256),
+                    (64, 32), (64, 64), (64, 128), (64, 256),
+                    (128, 32), (128, 64), (128, 128), (128, 256),
+                    (256, 32), (256, 64), (256, 128), (256, 256))
+
+# ~16 MiB/core physical VMEM minus headroom for Mosaic temporaries.
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+
+def catalog_vmem_bytes(block_m: int, block_n: int, d: int,
+                       capacity: int = 0) -> int:
+    """Worst-case VMEM bytes one grid step of the catalog kernels holds
+    live: double-buffered strips + compute planes (+ compaction epilogue
+    when ``capacity`` > 0). Shared with er/compiler/tune.py, which drops
+    lattice candidates this model puts over ``VMEM_BUDGET_BYTES``."""
+    strips = 2 * (block_m + block_n) * d * 4
+    compute = 4 * block_m * block_n * 4
+    epilogue = 0
+    if capacity:
+        epilogue = (block_m * block_m + block_n * block_n
+                    + capacity * block_n + capacity) * 4
+    return strips + compute + epilogue
+
+
+def check_vmem(block_m: int, block_n: int, d: int, capacity: int = 0) -> None:
+    """Lowering-time guard: raise before tracing a kernel whose step
+    working set cannot fit VMEM."""
+    need = catalog_vmem_bytes(block_m, block_n, d, capacity)
+    if need > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"tile geometry ({block_m}, {block_n}) with d={d}"
+            f"{f', capacity={capacity}' if capacity else ''} needs "
+            f"{need} B VMEM per step > budget {VMEM_BUDGET_BYTES} B")
 
 
 def catalog_tile_mask(entry, gi, gj):
@@ -122,19 +177,89 @@ def pair_scores(a, b, *, threshold: float = 0.8, triangular: bool = False,
     return out[:m, :n]
 
 
-def _catalog_kernel(cat_ref, a_ref, b_ref, o_ref, *, threshold: float,
-                    block_m: int, block_n: int):
+# ---------------------------------------------------------------------------
+# Catalog kernels: double-buffered strip DMA
+# ---------------------------------------------------------------------------
+
+def _strip_dma(pltpu, cat_ref, hbm, buf, sem, slot, idx, col, blk):
+    """Async copy of the ``blk``-row strip named by catalog column ``col``
+    of entry ``idx`` from HBM into scratch slot ``slot``."""
+    return pltpu.make_async_copy(
+        hbm.at[pl.ds(cat_ref[idx, col] * blk, blk), :],
+        buf.at[slot], sem.at[slot])
+
+
+def _load_strips(cat_ref, a_hbm, b_hbm, a_buf, b_buf, a_sem, b_sem,
+                 block_m: int, block_n: int):
+    """The double-buffer schedule shared by both catalog kernels: kick
+    off entry t+1's strip DMAs into slot (t+1) % 2, then wait on slot
+    t % 2 (started by step t−1; by step t itself at the grid edge) and
+    return this entry's (block_m, d) / (block_n, d) strips. Safe because
+    the TPU grid is sequential: slot s is only overwritten two steps
+    after the step that computed from it."""
+    from jax.experimental.pallas import tpu as pltpu
+
     t = pl.program_id(0)
-    a = a_ref[...]                       # (block_m, d) — strip cat[t, 0]
-    b = b_ref[...]                       # (block_n, d) — strip cat[t, 1]
+    nt = pl.num_programs(0)
+    slot = jax.lax.rem(t, 2)
+    nxt = jax.lax.rem(t + 1, 2)
+
+    def start(s, idx):
+        _strip_dma(pltpu, cat_ref, a_hbm, a_buf, a_sem, s, idx, 0,
+                   block_m).start()
+        _strip_dma(pltpu, cat_ref, b_hbm, b_buf, b_sem, s, idx, 1,
+                   block_n).start()
+
+    @pl.when(t == 0)
+    def _():                              # warm-up: nobody prefetched t=0
+        start(slot, t)
+
+    @pl.when(t + 1 < nt)
+    def _():                              # prefetch t+1 while t computes
+        start(nxt, t + 1)
+
+    _strip_dma(pltpu, cat_ref, a_hbm, a_buf, a_sem, slot, t, 0,
+               block_m).wait()
+    _strip_dma(pltpu, cat_ref, b_hbm, b_buf, b_sem, slot, t, 1,
+               block_n).wait()
+    return a_buf[slot], b_buf[slot]
+
+
+def _entry_keep(cat_ref, a, b, *, threshold: float, block_m: int,
+                block_n: int):
+    """Score the current entry's strips and apply its predicate."""
+    t = pl.program_id(0)
     s = jax.lax.dot_general(
         a, b, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)        # (block_m, block_n) MXU
     entry = [cat_ref[t, c] for c in range(NCOLS)]
     gi = entry[0] * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
     gj = entry[1] * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    keep = (s >= threshold) & catalog_tile_mask(entry, gi, gj)
+    return (s >= threshold) & catalog_tile_mask(entry, gi, gj)
+
+
+def _catalog_kernel(cat_ref, a_hbm, b_hbm, o_ref, a_buf, b_buf, a_sem,
+                    b_sem, *, threshold: float, block_m: int, block_n: int):
+    a, b = _load_strips(cat_ref, a_hbm, b_hbm, a_buf, b_buf, a_sem, b_sem,
+                        block_m, block_n)
+    keep = _entry_keep(cat_ref, a, b, threshold=threshold,
+                       block_m=block_m, block_n=block_n)
     o_ref[...] = keep[None].astype(jnp.float32)
+
+
+def _catalog_specs(block_m: int, block_n: int, d: int, a_dtype, b_dtype):
+    """HBM-resident input specs + double-buffered scratch for the catalog
+    kernels: the features stay in ANY (= HBM) and the kernel pulls strips
+    itself via :func:`_load_strips`."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY)]
+    scratch = [pltpu.VMEM((2, block_m, d), a_dtype),
+               pltpu.VMEM((2, block_n, d), b_dtype),
+               pltpu.SemaphoreType.DMA((2,)),
+               pltpu.SemaphoreType.DMA((2,))]
+    return in_specs, scratch
 
 
 @functools.partial(
@@ -149,51 +274,47 @@ def pair_scores_catalog(a, b, catalog, *, threshold: float = 0.8,
     Returns (T, block_m, block_n) f32 ∈ {0, 1}: 1 where the pair belongs
     to the entry's task AND its score passes ``threshold``.
 
-    The catalog is the scalar-prefetch operand: the BlockSpec index_maps
-    read each entry's strip origins from SMEM before the step's DMA, so
+    The catalog is the scalar-prefetch operand (SMEM); the features stay
+    in HBM and each grid step's strips arrive by double-buffered manual
+    DMA — entry t+1's strips are in flight while entry t's dot runs — so
     the whole plan executes as ONE pallas_call regardless of how many
-    match tasks / blocks it covers.
+    match tasks / blocks it covers, with copy-in off the critical path.
     """
     from .grouped_mm import pltpu_prefetch
 
     m, d = a.shape
     n = b.shape[0]
     t = catalog.shape[0]
+    check_vmem(block_m, block_n, d)
     mp = -(-m // block_m) * block_m
     np_ = -(-n // block_n) * block_n
     a_p = jnp.zeros((mp, d), a.dtype).at[:m].set(a)
     b_p = jnp.zeros((np_, d), b.dtype).at[:n].set(b)
 
+    in_specs, scratch = _catalog_specs(block_m, block_n, d,
+                                       a_p.dtype, b_p.dtype)
     grid_spec = pl.GridSpec(
         grid=(t,),
-        in_specs=[
-            pl.BlockSpec((block_m, d), lambda i, cat: (cat[i, 0], 0)),
-            pl.BlockSpec((block_n, d), lambda i, cat: (cat[i, 1], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_m, block_n), lambda i, cat: (i, 0, 0)),
     )
     return pl.pallas_call(
         functools.partial(_catalog_kernel, threshold=threshold,
                           block_m=block_m, block_n=block_n),
-        grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1),
+        grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1,
+                                 scratch_shapes=scratch),
         out_shape=jax.ShapeDtypeStruct((t, block_m, block_n), jnp.float32),
         interpret=interpret,
     )(catalog, a_p, b_p)
 
 
-def _catalog_compact_kernel(cat_ref, a_ref, b_ref, packed_ref, count_ref, *,
-                            threshold: float, block_m: int, block_n: int,
-                            capacity: int):
-    t = pl.program_id(0)
-    a = a_ref[...]                       # (block_m, d) — strip cat[t, 0]
-    b = b_ref[...]                       # (block_n, d) — strip cat[t, 1]
-    s = jax.lax.dot_general(
-        a, b, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)        # (block_m, block_n) MXU
-    entry = [cat_ref[t, c] for c in range(NCOLS)]
-    gi = entry[0] * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    gj = entry[1] * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    keep = (s >= threshold) & catalog_tile_mask(entry, gi, gj)
+def _catalog_compact_kernel(cat_ref, a_hbm, b_hbm, packed_ref, count_ref,
+                            a_buf, b_buf, a_sem, b_sem, *, threshold: float,
+                            block_m: int, block_n: int, capacity: int):
+    a, b = _load_strips(cat_ref, a_hbm, b_hbm, a_buf, b_buf, a_sem, b_sem,
+                        block_m, block_n)
+    keep = _entry_keep(cat_ref, a, b, threshold=threshold,
+                       block_m=block_m, block_n=block_n)
     kf = keep.astype(jnp.float32)
 
     # Row-major survivor ranks without scatter/sort (neither lowers to
@@ -214,8 +335,8 @@ def _catalog_compact_kernel(cat_ref, a_ref, b_ref, packed_ref, count_ref, *,
         preferred_element_type=jnp.float32)        # (bm, 1)
     dest = jnp.where(keep, row_off + excl, -1.0)   # pack slot, −1 = dead
 
-    li = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    lj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    li = jax.lax.broadcasted_iota(jnp.int32, keep.shape, 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, keep.shape, 1)
     flat = (li * block_n + lj).astype(jnp.float32)  # tile-local pair id
 
     # packed[k] = Σ_p [dest_p == k] · flat_p — a one-hot contraction per
@@ -262,23 +383,24 @@ def pair_scores_catalog_compact(a, b, catalog, *, threshold: float = 0.8,
     pack slots come from prefix sums expressed as triangular-ones
     matmuls, and packing is a one-hot dot contraction — all MXU/VPU
     primitives, computed per tile while the scores are still in VMEM.
+    Strips arrive by the same double-buffered DMA as the mask variant.
     """
     from .grouped_mm import pltpu_prefetch
 
     m, d = a.shape
     n = b.shape[0]
     t = catalog.shape[0]
+    check_vmem(block_m, block_n, d, capacity)
     mp = -(-m // block_m) * block_m
     np_ = -(-n // block_n) * block_n
     a_p = jnp.zeros((mp, d), a.dtype).at[:m].set(a)
     b_p = jnp.zeros((np_, d), b.dtype).at[:n].set(b)
 
+    in_specs, scratch = _catalog_specs(block_m, block_n, d,
+                                       a_p.dtype, b_p.dtype)
     grid_spec = pl.GridSpec(
         grid=(t,),
-        in_specs=[
-            pl.BlockSpec((block_m, d), lambda i, cat: (cat[i, 0], 0)),
-            pl.BlockSpec((block_n, d), lambda i, cat: (cat[i, 1], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, capacity), lambda i, cat: (i, 0)),
             pl.BlockSpec((1, 1), lambda i, cat: (i, 0)),
@@ -288,7 +410,8 @@ def pair_scores_catalog_compact(a, b, catalog, *, threshold: float = 0.8,
         functools.partial(_catalog_compact_kernel, threshold=threshold,
                           block_m=block_m, block_n=block_n,
                           capacity=capacity),
-        grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1),
+        grid_spec=pltpu_prefetch(grid_spec, num_scalar_prefetch=1,
+                                 scratch_shapes=scratch),
         out_shape=(jax.ShapeDtypeStruct((t, capacity), jnp.int32),
                    jax.ShapeDtypeStruct((t, 1), jnp.int32)),
         interpret=interpret,
