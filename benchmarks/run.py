@@ -25,7 +25,8 @@ def main(argv=None):
     from . import (chaos_bench, fig8_datasets, fig9_skew,
                    fig10_reduce_tasks, fig11_sorted, fig12_map_output,
                    fig13_scaling, fig_sn_window, kernel_bench,
-                   schedule_bench, serve_bench, steal_bench, tune_bench)
+                   mesh_bench, schedule_bench, serve_bench, steal_bench,
+                   tune_bench)
 
     suites = {
         "fig8": lambda: fig8_datasets.run(quick=args.quick),
@@ -38,6 +39,7 @@ def main(argv=None):
         "kernels": lambda: kernel_bench.run(quick=args.quick),
         "schedule": lambda: schedule_bench.run(quick=args.quick),
         "serve": lambda: serve_bench.run(quick=args.quick),
+        "mesh": lambda: mesh_bench.run(quick=args.quick),
         "chaos": lambda: chaos_bench.run(quick=args.quick),
         "steal": lambda: steal_bench.run(quick=args.quick),
         "tune": lambda: tune_bench.run(quick=args.quick),

@@ -18,9 +18,14 @@ jobs — flows through the same four stages:
      `Schedule.stats()` reports the imbalance the paper optimizes.
   4. **Execution** (`execute.py`): one generic `execute(catalog,
      feats_*, mesh=...)` scores any catalog — single host, all-gather
-     self-join, replicated-query cross join, or RepSN halo exchange —
-     through the fused kernel, replacing the per-strategy shard_map
-     wrappers.
+     self-join, replicated-query cross join, or RepSN multi-hop halo
+     exchange — through the fused kernel, replacing the per-strategy
+     shard_map wrappers. A `comms=` policy (`comms.py`) swaps the flat
+     all-gather for ring / hierarchical strip exchanges on the `data`
+     axis, and `model_axis=` column-shards the features over a second
+     mesh axis with in-scorer psum combination; every flow's
+     bytes-received-per-device lands in `stage1_stats["interconnect"]`
+     and on `Schedule.stats()`.
 
 A fifth, optional layer wraps execution in a fault-tolerant supervisor
 (`execute_supervised` + `faults.py`, DESIGN.md §Fault tolerance):
@@ -56,6 +61,17 @@ from .lower import (  # noqa: F401
     pad_catalog,
     pad_tiles,
     task_tiles,
+)
+from .comms import (  # noqa: F401
+    COMMS_POLICIES,
+    CommsPlan,
+    comms_volume,
+    default_group,
+    halo_bytes_per_device,
+    halo_hop_rows,
+    plan_comms,
+    psum_bytes_per_device,
+    rewrite_tiles_local,
 )
 from .schedule import (  # noqa: F401
     NoHealthyDevicesError,

@@ -11,10 +11,24 @@ flows that used to be separate near-duplicate shard_map wrappers:
   * **cross** — two-source: the a-side (corpus) row-sharded and
     gathered, the b-side (query batch) replicated.
   * **halo** — RepSN: features row-sharded in sorted order, each device
-    fetches only the halo boundary rows of the next shard via a
-    neighbor ``ppermute`` instead of all-gathering; tiles are in
+    fetches only the ``halo`` boundary rows of the following shards via
+    ⌈halo/n_loc⌉ chained neighbor ``ppermute`` hops (the last hop sends
+    only the final partial strip) instead of all-gathering; tiles are in
     shard-local coordinates and ``base`` shifts survivors back to
     global rows.
+
+The self/cross gathers take a ``comms`` policy (see ``compiler.comms``):
+``"flat"`` is the all_gather above; ``"ring"`` assembles only the
+``hops`` forward strips a device's tiles actually read via chained
+``ppermute``; ``"hierarchical"`` runs an intra-group ring then
+inter-group panel hops. Both rely on the planner's locality tile
+placement and buffer-local tile rewrite — ``execute(comms=...)`` wires
+all of it. A ``model_axis`` additionally column-shards the features:
+each device scores (n_loc, d/n_model) panels into *partial* tile scores
+and a ``psum`` over ``model`` combines them before the threshold +
+catalog-predicate epilogue (which is meaningless on partials). Every
+gather/hop/psum's bytes-received-per-device land in
+``stage1_stats["interconnect"]``.
 
 ``make_scorer`` builds the jitted per-shard scorer ONCE — resident
 services hold one and reuse it for every micro-batch (jit caches by
@@ -31,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .comms import (COMMS_POLICIES, CommsPlan, halo_bytes_per_device,
+                    plan_comms, psum_bytes_per_device, rewrite_tiles_local)
 from .faults import DeviceKilledError, FaultInjector, TransientScorerError
 from .feedback import N_TILE_CLASSES, EwmaCostModel, tile_class
 from .ir import A_TILE, B_TILE, NCOLS, TileCatalog
@@ -106,8 +122,16 @@ def _pad_pow2(t: int, cap: int) -> int:
 #                       capacity, forcing an exact mask-path fallback
 # serve_bench asserts nonzero_decodes stays 0 across steady-state
 # serving (the compaction epilogue replaced the host round-trip).
+# "interconnect" accumulates bytes RECEIVED per device, per data flow,
+# summed over kernel launches (each launch re-runs its gather), using
+# the exact formulas of ``compiler.comms`` — mesh_bench asserts the
+# ring/flat ratio on these counters.
 stage1_stats: dict = {"compact_decodes": 0, "nonzero_decodes": 0,
-                      "compact_overflows": 0}
+                      "compact_overflows": 0,
+                      "interconnect": {"flat_bytes": 0, "ring_bytes": 0,
+                                       "hier_intra_bytes": 0,
+                                       "hier_inter_bytes": 0,
+                                       "halo_bytes": 0, "psum_bytes": 0}}
 
 
 def _decode_packed(packed: np.ndarray, counts: np.ndarray,
@@ -228,17 +252,60 @@ class CatalogScorer:
         return self._mask_twin
 
 
+def _raw_to_mask(total, tiles, bm: int, bn: int, threshold: float):
+    """Threshold + catalog-predicate epilogue on COMBINED tile scores —
+    the post-psum half of the model-parallel path (partial scores cannot
+    be thresholded; see ``ref.pair_scores_catalog_raw_ref``)."""
+    from ...kernels.pair_sim import catalog_tile_mask
+
+    def one(entry, s):
+        gi = entry[0] * bm + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        gj = entry[1] * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        keep = (s >= threshold) & catalog_tile_mask(entry, gi, gj)
+        return keep.astype(jnp.float32)
+
+    return jax.vmap(one)(tiles, total)
+
+
 def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
                 threshold: float, block_m: int = 128, block_n: int = 128,
                 impl: str = "xla", halo: int = 0, compact: bool = False,
-                capacity: Optional[int] = None) -> CatalogScorer:
+                capacity: Optional[int] = None, comms: str = "flat",
+                hops: int = 0, group: int = 1, inter_hops: int = 0,
+                model_axis: Optional[str] = None) -> CatalogScorer:
     """Build ONE jitted per-shard catalog scorer for the given data flow.
 
     mode="self":  scorer(feats_sharded, tiles_chunk)
     mode="cross": scorer(feats_a_sharded, feats_b_replicated, tiles_chunk)
-    mode="halo":  scorer(feats_sharded, tiles_chunk) — neighbor ppermute
-                  of ``halo`` boundary rows instead of an all-gather;
-                  tiles index the [local ‖ halo] strip.
+    mode="halo":  scorer(feats_sharded, tiles_chunk) — ⌈halo/n_loc⌉
+                  chained neighbor ppermute hops (full strips, then the
+                  final partial strip) instead of an all-gather; tiles
+                  index the [local ‖ halo] strip and each device
+                  receives exactly ``halo`` rows.
+
+    ``comms`` selects the self/cross gather (``compiler.comms``):
+    "flat" all_gathers; "ring" runs ``hops`` chained forward ppermutes,
+    assembling the contiguous strip window [d·n_loc, d·n_loc +
+    (hops+1)·n_loc) — tiles must be rewritten to that buffer's local
+    coordinates and placed by the planner's locality rule, which is what
+    bounds ``hops``; "hierarchical" assembles each ``group``-strip panel
+    with an intra-group ring (reordered to global row order with a roll
+    by the device's in-group rank), then exchanges whole panels over
+    ``inter_hops`` stride-``group`` hops. Hop counts are compile-time
+    constants — resident services pin them and route plans needing more
+    hops to a flat scorer instead of recompiling.
+
+    ``model_axis`` column-shards the features (d/n_model per device):
+    the gather assembles rows as usual (columns stay local), the kernel
+    computes *partial* tile scores via the raw (unthresholded, unmasked)
+    op, a ``psum`` over ``model_axis`` combines them, and the threshold
+    + predicate epilogue runs on the combined scores — compaction then
+    packs post-psum via ``ref.pack_survivor_mask``. Outputs are
+    replicated over ``model`` (post-psum), so out_specs stay data-only.
+    The psum reassociates the d-dimensional dot, so a score lying within
+    float ulps OF THE THRESHOLD ITSELF can flip versus the single-axis
+    path — data-axis comms policies by contrast reduce in the same
+    order and are bit-exact against flat.
 
     Each returns (n_dev, chunk, bm, bn) survivor masks — or, with
     ``compact=True`` (compiled backends only; see
@@ -250,11 +317,31 @@ def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
     reuse it: jit caches by the wrapped function's identity, so a
     per-call closure would retrace every batch.
     """
-    from ...kernels import ops
+    from ...kernels import ops, ref
 
     cap = capacity if capacity is not None else block_m * block_n
+    if comms not in COMMS_POLICIES:
+        raise ValueError(f"unknown comms policy {comms!r}")
+    if comms != "flat" and mode == "halo":
+        raise ValueError("halo mode has its own neighbor exchange; "
+                         "comms applies to self/cross gathers only")
+    n_data = int(mesh.shape[axis])
+    perm_fwd = [(s, (s - 1) % n_data) for s in range(n_data)]
+
+    def _epilogue(mask):
+        if compact:
+            packed, counts = ref.pack_survivor_mask(mask, cap)
+            return packed[None], counts[None]
+        return mask[None]
 
     def _score(a, b, tiles_l):
+        if model_axis is not None:
+            raw = ops.pair_scores_catalog_raw(
+                a, b, tiles_l[0], block_m=block_m, block_n=block_n,
+                impl=impl)
+            total = jax.lax.psum(raw, model_axis)
+            return _epilogue(_raw_to_mask(total, tiles_l[0], block_m,
+                                          block_n, threshold))
         if compact:
             packed, counts = ops.pair_scores_catalog_compact(
                 a, b, tiles_l[0], threshold=threshold,
@@ -265,29 +352,74 @@ def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
             block_m=block_m, block_n=block_n, impl=impl)
         return mask[None]
 
+    def _gather(feats_l):
+        if comms == "flat":
+            return jax.lax.all_gather(feats_l, axis, tiled=True)
+        if comms == "ring":
+            # Hop k delivers strip d+k; the buffer is the contiguous
+            # global row window starting at this device's own strip.
+            parts, cur = [feats_l], feats_l
+            for _ in range(hops):
+                cur = jax.lax.ppermute(cur, axis, perm_fwd)
+                parts.append(cur)
+            return jnp.concatenate(parts, axis=0) if hops else feats_l
+        g = group
+        n_loc = feats_l.shape[0]
+        perm_intra = [(s, (s // g) * g + ((s % g) - 1) % g)
+                      for s in range(n_data)]
+        perm_inter = [(s, (s - g) % n_data) for s in range(n_data)]
+        parts, cur = [feats_l], feats_l
+        for _ in range(g - 1):
+            cur = jax.lax.ppermute(cur, axis, perm_intra)
+            parts.append(cur)
+        panel = jnp.concatenate(parts, axis=0)
+        if g > 1:
+            # Device G·g+p assembled [strip p, p+1, … (group-relative,
+            # wrapped)]; roll by its in-group rank restores global row
+            # order so the panel is one contiguous window for every
+            # group member.
+            p = jax.lax.axis_index(axis) % g
+            panel = jnp.roll(panel, p * n_loc, axis=0)
+        iparts, cur = [panel], panel
+        for _ in range(inter_hops):
+            cur = jax.lax.ppermute(cur, axis, perm_inter)
+            iparts.append(cur)
+        return jnp.concatenate(iparts, axis=0) if inter_hops else panel
+
+    fspec = P(axis, model_axis) if model_axis else P(axis)
     out_specs = (P(axis), P(axis)) if compact else P(axis)
     if mode == "self":
         def job2(feats_l, tiles_l):
-            feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
+            feats_g = _gather(feats_l)
             return _score(feats_g, feats_g, tiles_l)
-        in_specs = (P(axis), P(axis))
+        in_specs = (fspec, P(axis))
     elif mode == "cross":
-        def job2(feats_l, feats_q, tiles_l):
-            feats_g = jax.lax.all_gather(feats_l, axis, tiled=True)
-            return _score(feats_g, feats_q, tiles_l)
-        in_specs = (P(axis), P(), P(axis))
-    elif mode == "halo":
-        n_dev = int(mesh.shape[axis])
-        perm = [(s, (s - 1) % n_dev) for s in range(n_dev)]
+        bspec = P(None, model_axis) if model_axis else P()
 
+        def job2(feats_l, feats_q, tiles_l):
+            feats_g = _gather(feats_l)
+            return _score(feats_g, feats_q, tiles_l)
+        in_specs = (fspec, bspec, P(axis))
+    elif mode == "halo":
         def job2(feats_l, tiles_l):
             if halo:
-                nbr = jax.lax.ppermute(feats_l[:halo], axis, perm)
-                feats_cat = jnp.concatenate([feats_l, nbr], axis=0)
+                n_loc = feats_l.shape[0]
+                k_hops = -(-halo // n_loc)
+                take = halo - (k_hops - 1) * n_loc
+                # Chained forward hops: before hop k each device holds
+                # strip d+k−1 and forwards it; the LAST hop sends only
+                # the ``take``-row prefix, so bytes received per device
+                # are exactly halo · row_bytes.
+                parts, cur = [feats_l], feats_l
+                for k in range(1, k_hops + 1):
+                    send = cur if k < k_hops else cur[:take]
+                    cur = jax.lax.ppermute(send, axis, perm_fwd)
+                    parts.append(cur)
+                feats_cat = jnp.concatenate(parts, axis=0)
             else:
                 feats_cat = feats_l
             return _score(feats_cat, feats_cat, tiles_l)
-        in_specs = (P(axis), P(axis))
+        in_specs = (fspec, P(axis))
     else:
         raise ValueError(f"unknown scorer mode {mode!r}")
 
@@ -295,7 +427,9 @@ def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
     mask_factory = (
         (lambda: make_scorer(mesh, axis, mode=mode, threshold=threshold,
                              block_m=block_m, block_n=block_n, impl=impl,
-                             halo=halo, compact=False))
+                             halo=halo, compact=False, comms=comms,
+                             hops=hops, group=group, inter_hops=inter_hops,
+                             model_axis=model_axis))
         if compact else (lambda: None))
     return CatalogScorer(fn, compact=compact, capacity=cap,
                          mask_factory=mask_factory)
@@ -303,7 +437,9 @@ def make_scorer(mesh: Mesh, axis: str = "data", *, mode: str = "self",
 
 def _score_and_compact(shard, operands, tiles_dev, chunk: int,
                        bm: int, bn: int,
-                       base: Optional[np.ndarray] = None
+                       base_a: Optional[np.ndarray] = None,
+                       base_b: Optional[np.ndarray] = None,
+                       launch_flows=None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """Drive a jitted per-shard catalog scorer chunk by chunk and compact
     each chunk's output into global (rows_a, rows_b) — host memory stays
@@ -315,16 +451,31 @@ def _score_and_compact(shard, operands, tiles_dev, chunk: int,
     whose exact count exceeds the capacity (only possible with a
     user-bounded capacity) re-scores that chunk through the lazily built
     mask twin, exactness over speed. Both paths are counted in
-    ``stage1_stats``. ``base`` (n_dev,) shifts device-local tile
-    coordinates to global rows (the RepSN local-coordinate path); None
-    means the tiles already carry global strip indices."""
+    ``stage1_stats``. ``base_a``/``base_b`` (n_dev,) shift device-local
+    tile coordinates to global rows on each side (the RepSN and
+    ring/hierarchical local-coordinate paths — cross-mode ring shifts
+    the a-side only, since the b operand was never rewritten); None
+    means that side's tiles already carry global strip indices.
+    ``launch_flows(chunk_size) -> {flow: bytes}`` is called once per
+    scorer invocation (including mask-twin refires — every invocation
+    re-runs its gather) and accumulated into
+    ``stage1_stats["interconnect"]``."""
     cap = tiles_dev.shape[1]
     is_compact = getattr(shard, "compact", False)
     out_a, out_b = [], []
+
+    def _account(csize: int) -> None:
+        if launch_flows is None:
+            return
+        acc = stage1_stats["interconnect"]
+        for k, v in launch_flows(csize).items():
+            acc[k] = acc.get(k, 0) + v
+
     for lo in range(0, cap, chunk):
         part = tiles_dev[:, lo:lo + chunk]
         masks = None
         if is_compact:
+            _account(part.shape[1])
             packed, counts = shard(*operands, jnp.asarray(part))
             counts = np.asarray(counts)[..., 0].astype(np.int64)  # (n_dev, C)
             if counts.max(initial=0) <= shard.capacity:
@@ -333,23 +484,74 @@ def _score_and_compact(shard, operands, tiles_dev, chunk: int,
                 for dd in range(part.shape[0]):
                     ra, rb = _decode_packed(packed[dd], counts[dd],
                                             part[dd], bm, bn)
-                    off = base[dd] if base is not None else 0
-                    out_a.append(off + ra)
-                    out_b.append(off + rb)
+                    off_a = base_a[dd] if base_a is not None else 0
+                    off_b = base_b[dd] if base_b is not None else 0
+                    out_a.append(off_a + ra)
+                    out_b.append(off_b + rb)
                 continue
             stage1_stats["compact_overflows"] += 1
+            _account(part.shape[1])
             masks = np.asarray(shard.mask_twin()(*operands,
                                                  jnp.asarray(part)))
         if masks is None:
+            _account(part.shape[1])
             masks = np.asarray(shard(*operands, jnp.asarray(part)))
         stage1_stats["nonzero_decodes"] += 1
         d, ti, ii, jj = np.nonzero(masks)
-        off = base[d] if base is not None else 0
-        out_a.append(off + part[d, ti, A_TILE].astype(np.int64) * bm + ii)
-        out_b.append(off + part[d, ti, B_TILE].astype(np.int64) * bn + jj)
+        off_a = base_a[d] if base_a is not None else 0
+        off_b = base_b[d] if base_b is not None else 0
+        out_a.append(off_a + part[d, ti, A_TILE].astype(np.int64) * bm + ii)
+        out_b.append(off_b + part[d, ti, B_TILE].astype(np.int64) * bn + jj)
     if not out_a:
         return np.zeros(0, np.int64), np.zeros(0, np.int64)
     return np.concatenate(out_a), np.concatenate(out_b)
+
+
+def _tiles_by_device(catalog: TileCatalog, n_dev: int,
+                     device_of: np.ndarray) -> np.ndarray:
+    """(n_dev, cap, NCOLS) tile shards from an explicit placement (the
+    comms planner's locality rule), zero-padded like
+    :func:`tiles_for_devices` (empty windows mask everything out)."""
+    counts = np.bincount(device_of, minlength=n_dev)
+    cap = max(int(counts.max(initial=0)), 1)
+    out = np.zeros((n_dev, cap, NCOLS), np.int32)
+    for d in range(n_dev):
+        mine = catalog.tiles[device_of == d]
+        out[d, :mine.shape[0]] = mine
+    return out
+
+
+def _launch_flows_factory(plan: Optional[CommsPlan], halo: int,
+                          n_data: int, n_model: int, n_rows: int,
+                          feature_dim: int, bm: int, bn: int):
+    """Per-launch interconnect accounting for :func:`_score_and_compact`:
+    ``flows(chunk_size) -> {flow: bytes received per device}``, mirroring
+    ``compiler.comms`` exactly (the gather/halo flows are launch-size
+    independent; the psum payload is the launched tile count)."""
+    if n_data <= 1 and n_model <= 1:
+        return None
+    n_loc = -(-n_rows // n_data)
+    d_loc = feature_dim // max(n_model, 1)
+
+    def flows(csize: int) -> dict:
+        out = {}
+        if halo:
+            out["halo_bytes"] = sum(
+                halo_bytes_per_device(n_loc, halo, d_loc))
+        elif plan is not None and plan.policy == "ring":
+            out["ring_bytes"] = plan.hops * n_loc * d_loc * plan.itemsize
+        elif plan is not None and plan.policy == "hierarchical":
+            row = d_loc * plan.itemsize
+            out["hier_intra_bytes"] = (plan.group - 1) * n_loc * row
+            out["hier_inter_bytes"] = (plan.inter_hops * plan.group
+                                       * n_loc * row)
+        elif n_data > 1:
+            out["flat_bytes"] = (n_data - 1) * n_loc * d_loc * 4
+        if n_model > 1:
+            out["psum_bytes"] = psum_bytes_per_device(n_model, csize, bm, bn)
+        return out
+
+    return flows
 
 
 def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
@@ -361,24 +563,44 @@ def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
             scorer=None, fixed_chunks: bool = False,
             halo: int = 0, base: Optional[np.ndarray] = None,
             compact: bool = True,
-            compact_capacity: Optional[int] = None
+            compact_capacity: Optional[int] = None,
+            comms: str = "flat",
+            comms_plan: Optional[CommsPlan] = None,
+            model_axis: Optional[str] = None
             ) -> Tuple[np.ndarray, np.ndarray]:
     """Stage 1 of ANY lowered catalog: compacted survivor candidates.
 
-    Single host (``mesh=None``): chunked :func:`score_catalog`.
+    Single host (``mesh=None``): chunked :func:`score_catalog` (comms
+    and model_axis are mesh concepts and are ignored).
     On a mesh: tiles route to devices via the :class:`Schedule` (cost-LPT
     placement) or round-robin when none is given, and each device scores
     its shard through a :func:`make_scorer` data flow — "self" when
     ``feats_b`` is None, "cross" when it is given (b replicated), "halo"
     when ``halo > 0`` (RepSN boundary replication; implies self-join,
-    ``base`` shifts local survivor coordinates to global rows).
+    ``base`` shifts local survivor coordinates to global rows; any
+    window size — the scorer chains ⌈halo/n_loc⌉ hops).
+
+    ``comms`` swaps the flat all-gather for the ring / hierarchical
+    strip exchange: the plan (``comms_plan`` > ``schedule.comms`` >
+    freshly planned from the catalog) carries the locality tile
+    placement, hop counts and buffer origins; tiles are rewritten to
+    buffer-local coordinates and the plan's ``base`` shifts survivors
+    back (a-side only in cross mode). A plan that degraded to flat
+    (``plan.fallback``) runs the flat path. Requires every device
+    healthy — locality placement has no failover, degrade to flat for
+    fault-tolerant runs. ``model_axis`` adds the second mesh axis:
+    features column-sharded d/n_model, partial scores psum-combined
+    in-scorer. Interconnect bytes per flow accumulate in
+    ``stage1_stats["interconnect"]``.
 
     ``fixed_chunks=True`` pads every device shard UP to a ``chunk_tiles``
     multiple so each kernel launch has the exact shape (n_dev,
     chunk_tiles, NCOLS) — the resident service's recompile guard;
     the default shrinks the chunk to the shard cap for one-shot jobs.
     Pass ``scorer=`` to reuse a prebuilt :func:`make_scorer` (required
-    for zero steady-state recompiles).
+    for zero steady-state recompiles); with ``comms_plan`` the scorer's
+    pinned hop count must cover the plan's (extra gathered strips are
+    never referenced, so over-gathering is exact — just wasted bytes).
 
     Returns host int64 (rows_a, rows_b); run stage 2 via
     :func:`verify_pairs`.
@@ -388,14 +610,43 @@ def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
                              threshold=threshold, impl=impl,
                              chunk_tiles=chunk_tiles, compact=compact,
                              compact_capacity=compact_capacity)
-    n_dev = int(mesh.shape[axis])
+    n_data = int(mesh.shape[axis])
+    n_model = int(mesh.shape[model_axis]) if model_axis else 1
     bm, bn = catalog.block_m, catalog.block_n
-    tiles_dev = tiles_for_devices(catalog, n_dev, healthy, schedule)
+    n_rows = int(feats_a.shape[0])
+    feature_dim = int(feats_a.shape[1])
+
+    plan = comms_plan
+    if plan is None and schedule is not None:
+        plan = getattr(schedule, "comms", None)
+    if plan is None and comms != "flat":
+        if halo:
+            raise ValueError("halo mode has its own neighbor exchange; "
+                             "comms must stay 'flat'")
+        if healthy is not None and not bool(np.all(healthy)):
+            raise ValueError("comms != 'flat' requires all devices healthy "
+                             "(locality placement has no failover); run "
+                             "degraded jobs with comms='flat'")
+        plan = plan_comms(catalog, n_rows, n_data, policy=comms,
+                          n_model=n_model, feature_dim=feature_dim,
+                          self_join=feats_b is None)
+
+    ring_like = plan is not None and plan.policy != "flat"
+    if ring_like:
+        tiles_dev = _tiles_by_device(catalog, n_data, plan.device_of_tile)
+    else:
+        tiles_dev = tiles_for_devices(catalog, n_data, healthy, schedule)
     if fixed_chunks:
         chunk = chunk_tiles
     else:
         chunk = min(chunk_tiles, max(tiles_dev.shape[1], 1))
     tiles_dev = pad_tiles(tiles_dev, chunk)
+    base_a = base_b = base
+    if ring_like:
+        tiles_dev = rewrite_tiles_local(tiles_dev, plan.base, bm, bn,
+                                        shift_b=feats_b is None)
+        base_a = plan.base
+        base_b = plan.base if feats_b is None else None
     if scorer is None:
         mode = "halo" if halo > 0 else ("cross" if feats_b is not None
                                         else "self")
@@ -403,11 +654,20 @@ def execute(catalog: TileCatalog, feats_a, feats_b=None, *,
         scorer = make_scorer(mesh, axis, mode=mode, threshold=threshold,
                              block_m=bm, block_n=bn, impl=rimpl, halo=halo,
                              compact=compact and _compact_on_device(rimpl),
-                             capacity=compact_capacity)
+                             capacity=compact_capacity,
+                             comms=plan.policy if plan is not None else "flat",
+                             hops=plan.hops if plan is not None else 0,
+                             group=plan.group if plan is not None else 1,
+                             inter_hops=(plan.inter_hops
+                                         if plan is not None else 0),
+                             model_axis=model_axis)
     operands = ((feats_a,) if feats_b is None
                 else (feats_a, jnp.asarray(feats_b)))
+    flows = _launch_flows_factory(plan, halo, n_data, n_model, n_rows,
+                                  feature_dim, bm, bn)
     return _score_and_compact(scorer, operands, tiles_dev, chunk, bm, bn,
-                              base=base)
+                              base_a=base_a, base_b=base_b,
+                              launch_flows=flows)
 
 
 # ---------------------------------------------------------------------------
@@ -765,16 +1025,22 @@ def match_catalog(catalog: TileCatalog, feats_a, codes_a, lens_a, *,
                   impl: str = "auto", mesh: Optional[Mesh] = None,
                   axis: str = "data", schedule: Optional[Schedule] = None,
                   chunk_tiles: int = 1024,
-                  compact_capacity: Optional[int] = None
+                  compact_capacity: Optional[int] = None,
+                  comms: str = "flat",
+                  comms_plan: Optional[CommsPlan] = None,
+                  model_axis: Optional[str] = None
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Fused filter-and-verify: kernel stage 1 over the tile catalog,
     exact stage 2 on compacted survivors. Returns matched (rows_a, rows_b)
-    — indices into the a-side (and b-side, if distinct) arrays."""
+    — indices into the a-side (and b-side, if distinct) arrays.
+    ``comms``/``comms_plan``/``model_axis`` pass through to
+    :func:`execute` (mesh runs only)."""
     cand_a, cand_b = execute(
         catalog, feats_a, feats_b,
         threshold=threshold - filter_margin, impl=impl,
         mesh=mesh, axis=axis, schedule=schedule, chunk_tiles=chunk_tiles,
-        compact_capacity=compact_capacity)
+        compact_capacity=compact_capacity, comms=comms,
+        comms_plan=comms_plan, model_axis=model_axis)
     if codes_b is None:
         codes_b, lens_b = codes_a, lens_a
     return verify_pairs(codes_a, lens_a, codes_b, lens_b,

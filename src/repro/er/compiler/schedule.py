@@ -97,6 +97,11 @@ class Schedule:
     # Runtime-feedback calibration (None without an EwmaCostModel):
     device_rate: Optional[np.ndarray] = None  # (n_dev,) s per live pair
     predicted_s: Optional[np.ndarray] = None  # (n_dev,) projected seconds
+    # Interconnect plan (None = flat all-gather): a comms.CommsPlan.
+    # When set, ``execute`` uses ITS locality tile placement instead of
+    # the cost-LPT one above (the hop bound depends on it) and surfaces
+    # the plan's byte accounting through ``stats()``.
+    comms: Optional[object] = None
 
     @property
     def n_dev(self) -> int:
@@ -123,6 +128,8 @@ class Schedule:
             alive = self.predicted_s[self.healthy]
             out["predicted_makespan_s"] = (float(alive.max())
                                            if alive.size else 0.0)
+        if self.comms is not None:
+            out["interconnect"] = self.comms.summary()
         return out
 
 
@@ -144,7 +151,7 @@ def device_assignment(r: int, n_dev: int,
 def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
                    healthy: Optional[np.ndarray] = None,
                    policy: str = "cost_lpt",
-                   feedback=None) -> Schedule:
+                   feedback=None, comms_plan=None) -> Schedule:
     """Assign tiles → reducers → devices.
 
     ``policy="cost_lpt"``: greedy LPT over exact tile costs fills the r
@@ -164,6 +171,13 @@ def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
     (:func:`core.assignment.greedy_lpt_hetero`), so a slow device gets
     proportionally less work. The projection lands on
     ``Schedule.predicted_s`` / ``stats()["predicted_makespan_s"]``.
+
+    ``comms_plan=`` attaches a :class:`~.comms.CommsPlan` — ``execute``
+    then uses the plan's locality tile placement (its hop bound depends
+    on tiles landing on their minimum needed strip, which overrides the
+    cost-LPT device routing above; reducer attribution and the balance
+    metrics are unchanged) and ``stats()`` reports the plan's per-flow
+    interconnect bytes under ``"interconnect"``.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown schedule policy {policy!r}")
@@ -210,7 +224,7 @@ def schedule_tiles(catalog: TileCatalog, *, n_dev: int = 1,
                     tile_reducer=tile_reducer, reducer_device=reducer_device,
                     reducer_load=reducer_load, device_load=device_load,
                     healthy=healthy, device_rate=device_rate,
-                    predicted_s=predicted_s)
+                    predicted_s=predicted_s, comms=comms_plan)
 
 
 def apply_schedule(catalog: TileCatalog, schedule: Schedule) -> TileCatalog:

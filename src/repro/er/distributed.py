@@ -44,6 +44,7 @@ from .compiler import (DeviceKilledError, FaultEvent, FaultInjector,
                        TransientScorerError, device_assignment, execute,
                        execute_supervised, lower, make_scorer, pad_tiles,
                        shard_sane, tiles_for_devices)
+from .compiler.comms import halo_bytes_per_device
 from .compiler.execute import _score_and_compact, _smap
 from .compiler.ir import make_job, task_row
 from .similarity import two_stage_match
@@ -205,19 +206,28 @@ def match_catalog_2src_dist(feats_a, feats_b, catalog: TileCatalog,
 
 
 def sn_replication_volume(n: int, w: int, n_dev: int, feature_dim: int,
-                          itemsize: int = 4) -> Tuple[int, int]:
+                          itemsize: int = 4, per_hop: bool = False):
     """Job-2 interconnect bytes *received* across all devices:
-    (boundary replication, full all-gather).
+    (boundary replication, full all-gather) — or, with ``per_hop``, the
+    per-device hop-by-hop byte schedule of the multi-hop halo chain.
 
     RepSN replicates only the w−1 boundary rows between adjacent shards —
     O(n_dev · w · d) — where the generic executors all_gather the whole
     feature matrix, O(n_dev · n · d). The gap is the SN analog of the
-    paper's map-output-replication accounting (Fig. 12).
+    paper's map-output-replication accounting (Fig. 12). The accounting
+    matches the executor at ANY window size: when w − 1 > n/n_dev the
+    halo crosses ⌈(w−1)/n_loc⌉ shards via chained hops, but the last hop
+    forwards only the final partial strip, so the total stays exactly
+    n_dev · (w−1) · d · itemsize — ``per_hop=True`` returns the
+    per-device hop list [n_loc·row_bytes, …, take·row_bytes] summing to
+    (w−1) · d · itemsize (the 2-tuple form sums it across devices).
     """
+    halo = _w_eff(n, w) - 1
     if n_dev <= 1:          # single device: the halo ppermute is a
-        return 0, 0         # self-send — nothing crosses the wire
-    n_loc = n // n_dev
-    halo = max(min(w, n) - 1, 0)
+        return ([] if per_hop else (0, 0))   # self-send — nothing
+    n_loc = n // n_dev      # crosses the wire
+    if per_hop:
+        return halo_bytes_per_device(n_loc, halo, feature_dim, itemsize)
     return (n_dev * halo * feature_dim * itemsize,
             n_dev * (n - n_loc) * feature_dim * itemsize)
 
@@ -241,9 +251,13 @@ def match_sn_dist(feats, w: int, mesh: Mesh, axis: str = "data",
     executor mode replaces the all-gather; the wrapped halo of the last
     device is masked out by its task's column window.
 
-    Single-hop halo: requires w − 1 ≤ n/n_dev. Returns compacted stage-1
-    survivor candidates (rows_a, rows_b) as sorted-order host int64
-    arrays; run stage 2 with ``compiler.verify_pairs``.
+    Any window size: when w − 1 > n/n_dev the halo spans several shards
+    and the scorer chains ⌈(w−1)/n_loc⌉ neighbor hops (the last hop
+    forwards only the final partial strip, so each device still receives
+    exactly w−1 rows — ``sn_replication_volume(per_hop=True)`` is the
+    schedule). Returns compacted stage-1 survivor candidates
+    (rows_a, rows_b) as sorted-order host int64 arrays; run stage 2
+    with ``compiler.verify_pairs``.
     """
     n, _ = feats.shape
     n_dev = int(mesh.shape[axis])
@@ -252,10 +266,6 @@ def match_sn_dist(feats, w: int, mesh: Mesh, axis: str = "data",
     n_loc = n // n_dev
     we = _w_eff(n, w)
     halo = we - 1
-    if halo > n_loc:
-        raise ValueError(
-            f"window {w} needs {halo} boundary rows > shard size {n_loc} "
-            "(multi-hop halo exchange not implemented)")
 
     rows = []
     for dev in range(n_dev):

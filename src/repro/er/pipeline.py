@@ -102,6 +102,12 @@ class ERConfig:
                                        # executor; overrides block_m/n)
     kernel_impl: str = "auto"          # auto | pallas | interpret | xla
     schedule_policy: str = "cost_lpt"  # cost_lpt | round_robin
+    comms: str = "flat"                # flat | ring | hierarchical —
+                                       # the data-axis gather policy when
+                                       # run_er is given a mesh (plans
+                                       # that miss the ring preconditions
+                                       # degrade to flat, reported on
+                                       # ERResult.extra["comms_fallback"])
     # ---- fault-tolerant execution (catalog executor only) ----
     supervised_devices: int = 0        # > 0: stage 1 through the supervisor
                                        # on N logical device shards
@@ -223,7 +229,8 @@ def _reference_reducer_rows(plan, r: int) -> List[Tuple[np.ndarray, np.ndarray]]
 
 def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
            block_ids: Optional[np.ndarray] = None,
-           fault_injector=None, feedback=None) -> ERResult:
+           fault_injector=None, feedback=None,
+           mesh=None, axis: str = "data") -> ERResult:
     """Match a single source. ``block_ids`` overrides prefix blocking (used
     by the Fig. 9 skew study; ignored by ``strategy="sorted_neighborhood"``,
     which partitions a sliding window over the sort order, not blocks).
@@ -245,6 +252,16 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     ``cfg.steal_factor`` work stealing; pass the same model across calls
     to keep its calibration. With ``cfg.steal_factor`` set and no model
     given, a fresh one is created for the run.
+
+    ``mesh`` runs the main Job-2 catalog on real devices (catalog
+    executor only) through ``compiler.execute``: rows shard over
+    ``axis``, ``cfg.comms`` picks the gather policy, and — when the mesh
+    has a ``model`` axis of size > 1 (``sharding.make_er_mesh``) — the
+    feature dimension shards over it with in-scorer psum combination.
+    Features are zero-padded to shard/tile-divisible sizes host-side
+    (padding rows/columns are never referenced by catalog tiles and
+    contribute 0 to every dot). The match_⊥ job is query-batch-sized
+    and stays on the host path, as does the reference executor.
     """
     n = len(titles)
     cfg = config if config is not None else ERConfig()
@@ -253,6 +270,11 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
     supervised = cfg.supervised_devices > 0 or fault_injector is not None
     if supervised and cfg.executor != "catalog":
         raise ValueError("supervised execution requires executor='catalog'")
+    if mesh is not None and supervised:
+        raise ValueError("supervised execution drives logical shards "
+                         "host-side; it cannot also run on a mesh")
+    if mesh is not None and cfg.executor != "catalog":
+        raise ValueError("mesh execution requires executor='catalog'")
     if supervised and feedback is None and cfg.steal_factor is not None:
         from .compiler import EwmaCostModel
         feedback = EwmaCostModel(max(cfg.supervised_devices, 1))
@@ -373,7 +395,34 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
         job = plan_to_job(plan)
         catalog = lower(job, *_geometry(job))
         extra["catalog_tiles"] = catalog.num_tiles
-        sched = schedule_tiles(catalog, policy=cfg.schedule_policy)
+        exec_feats, model_axis, comms_plan = g_feats, None, None
+        n_dev = 1
+        if mesh is not None:
+            n_dev = int(mesh.shape[axis])
+            n_model = (int(mesh.shape["model"])
+                       if "model" in mesh.axis_names and axis != "model"
+                       else 1)
+            if n_model > 1:
+                model_axis = "model"
+            # Zero-pad rows to shard×tile-aligned length and columns to
+            # model-divisible width: catalog tiles only reference real
+            # rows, and zero feature columns contribute 0 to every dot.
+            mult = n_dev * int(np.lcm(catalog.block_m, catalog.block_n))
+            rows_p = -(-g_feats.shape[0] // mult) * mult
+            cols_p = -(-g_feats.shape[1] // n_model) * n_model
+            if (rows_p, cols_p) != g_feats.shape:
+                exec_feats = np.zeros((rows_p, cols_p), g_feats.dtype)
+                exec_feats[:g_feats.shape[0], :g_feats.shape[1]] = g_feats
+            if cfg.comms != "flat":
+                from .compiler import plan_comms
+                comms_plan = plan_comms(
+                    catalog, rows_p, n_dev, policy=cfg.comms,
+                    n_model=n_model, feature_dim=cols_p, self_join=True)
+                if comms_plan.fallback:
+                    extra["comms_fallback"] = comms_plan.fallback
+        sched = schedule_tiles(catalog, n_dev=n_dev,
+                               policy=cfg.schedule_policy,
+                               comms_plan=comms_plan)
         sched_report = sched.stats()
         t0 = time.perf_counter()
         if supervised:
@@ -383,9 +432,11 @@ def run_er(titles: Sequence[str], config: Optional[ERConfig] = None,
                                   ca, cb, cfg.threshold)
         else:
             ha, hb = match_catalog(
-                apply_schedule(catalog, sched), g_feats, g_codes, g_lens,
+                apply_schedule(catalog, sched), exec_feats, g_codes, g_lens,
                 threshold=cfg.threshold, filter_margin=cfg.filter_margin,
-                impl=cfg.kernel_impl,
+                impl=cfg.kernel_impl, mesh=mesh, axis=axis,
+                schedule=sched if mesh is not None else None,
+                model_axis=model_axis,
                 compact_capacity=cfg.compact_capacity)
         elapsed = time.perf_counter() - t0
         for a, b in zip(to_global[ha], to_global[hb]):

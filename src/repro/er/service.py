@@ -29,7 +29,13 @@ in the blocked layout on device, BDM host-side) and serves
      devices through the compiler's cost-LPT schedule
      (`compiler.schedule_tiles`) — the cross-mode scorer
      (`compiler.make_scorer`) is jitted once at construction, because a
-     per-batch closure would retrace every call.
+     per-batch closure would retrace every call. With
+     ``ServiceConfig.comms`` = "ring" | "hierarchical" a second pinned
+     scorer replaces the flat corpus all-gather: keyed jobs plan a
+     per-batch :func:`compiler.plan_comms` locality placement (zero
+     hops — cross tiles never read outside their own strip), and jobs
+     whose plan degrades fall back to the flat scorer, so the
+     zero-recompile contract holds either way.
 
 Entities without blocking keys follow the paper's decomposition,
 restricted to cross pairs: null-key queries × whole corpus, plus
@@ -55,12 +61,13 @@ from ..core import blocked_layout, compute_bdm, entity_indices, update_bdm
 from ..core.two_source import (TwoSourceBDM, plan_block_split_2src,
                                plan_pair_range_2src)
 from .blocking import prefix_key
-from .compiler import (GEOMETRY_LATTICE, DeviceKilledError, EwmaCostModel,
-                       GeometryCostModel, NoHealthyDevicesError,
-                       RecoveryFailedError, SupervisedReport,
-                       TransientScorerError, TuneReport, autotune, cross_job,
-                       execute, execute_supervised, lower, make_scorer,
-                       pad_catalog, plan_to_job, schedule_tiles, verify_pairs)
+from .compiler import (COMMS_POLICIES, GEOMETRY_LATTICE, DeviceKilledError,
+                       EwmaCostModel, GeometryCostModel,
+                       NoHealthyDevicesError, RecoveryFailedError,
+                       SupervisedReport, TransientScorerError, TuneReport,
+                       autotune, cross_job, default_group, execute,
+                       execute_supervised, lower, make_scorer, pad_catalog,
+                       plan_comms, plan_to_job, schedule_tiles, verify_pairs)
 from .compiler.execute import _compact_on_device, _resolve_impl
 from .compiler.faults import FaultInjector
 from .pipeline import featurize
@@ -219,6 +226,11 @@ class _PlannedJob:
     lens_b: np.ndarray
     map_a: Optional[np.ndarray]
     map_b: np.ndarray
+    # Resolved comms plan for this job's catalog (mesh= with
+    # cfg.comms != "flat" only): locality tile placement + buffer
+    # origins for the pinned ring/hierarchical scorer. None routes the
+    # job through the flat all-gather scorer.
+    comms_plan: Optional[object] = None
 
 
 @dataclass
@@ -259,6 +271,12 @@ class ServiceConfig:
                                             # per tile; None = bm·bn (the
                                             # no-overflow default)
     schedule_policy: str = "cost_lpt"     # cost_lpt | round_robin
+    comms: str = "flat"                   # mesh= gather policy for keyed
+                                          # jobs: flat | ring |
+                                          # hierarchical (DESIGN.md §Mesh
+                                          # scale-out). Ignored without a
+                                          # mesh; jobs whose plan degrades
+                                          # run the flat scorer.
     # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
     exec_devices: int = 0                 # > 0: supervised stage 1 over N
                                           # logical device shards
@@ -302,6 +320,19 @@ class ERService:
         self.mesh = mesh
         self.axis = axis
         self._n_dev = int(mesh.shape[axis]) if mesh is not None else 1
+        if cfg.comms not in COMMS_POLICIES:
+            raise ValueError(f"unknown comms policy {cfg.comms!r}")
+        # Residency row multiple: shard-divisible always; with a comms
+        # policy also tile-divisible at EVERY geometry the service can
+        # serve (cfg.block_m plus the autotune lattice), so
+        # n_loc % bm == 0 holds after any re-pin and per-batch plans
+        # never degrade on alignment.
+        self._row_mult = self._n_dev
+        if mesh is not None and cfg.comms != "flat":
+            bms = {int(cfg.block_m)}
+            if cfg.autotune_tiles:
+                bms |= {int(bm) for bm, _ in cfg.autotune_lattice}
+            self._row_mult *= int(np.lcm.reduce(sorted(bms)))
         if cfg.exec_devices > 0 and mesh is not None:
             raise ValueError(
                 "supervised execution (exec_devices > 0) drives logical "
@@ -392,6 +423,9 @@ class ERService:
         self._block_m = cfg.block_m
         self._block_n = cfg.block_n
         self._dist_scorer = None
+        self._comms_scorer = None
+        self._pin_group = (default_group(self._n_dev)
+                           if cfg.comms == "hierarchical" else 1)
         self._build_dist_scorer()
 
     def _build_dist_scorer(self):
@@ -411,6 +445,22 @@ class ERService:
             block_m=self._block_m, block_n=self._block_n, impl=rimpl,
             compact=_compact_on_device(rimpl),
             capacity=cfg.compact_capacity)
+        if cfg.comms != "flat":
+            # The pinned comms scorer. Hop counts are compile-time
+            # constants, and for cross-mode jobs ZERO hops is exact, not
+            # a guess: every catalog tile's a-rows sit inside one
+            # bm-aligned block, and residency padding keeps n_loc a
+            # multiple of every served bm, so a locality-placed tile
+            # never reads outside its own strip. Ring therefore gathers
+            # nothing; hierarchical still assembles its group panel
+            # (g − 1 intra hops) with zero inter-group hops. Plans whose
+            # alignment gates fail degrade to the flat scorer above.
+            self._comms_scorer = make_scorer(
+                self.mesh, self.axis, mode="cross", threshold=self._stage1,
+                block_m=self._block_m, block_n=self._block_n, impl=rimpl,
+                compact=_compact_on_device(rimpl),
+                capacity=cfg.compact_capacity, comms=cfg.comms,
+                hops=0, group=self._pin_group, inter_hops=0)
 
     def _set_geometry(self, block_m: int, block_n: int):
         """Pin a served tile geometry (autotune warmup only)."""
@@ -467,7 +517,7 @@ class ERService:
             return None
         if self.mesh is None:
             return jnp.asarray(feats)
-        pad = (-feats.shape[0]) % self._n_dev
+        pad = (-feats.shape[0]) % self._row_mult
         if pad:
             feats = np.concatenate(
                 [feats, np.zeros((pad, feats.shape[1]), feats.dtype)], axis=0)
@@ -486,30 +536,39 @@ class ERService:
         return buf
 
     def _score(self, feats_a, catalog, q_buf: np.ndarray,
-               ctx: _RequestContext):
+               ctx: _RequestContext, comms_plan=None):
         """Stage 1 with fixed shapes: the catalog is pre-padded to a
         tile_chunk multiple, the query buffer to a bucket size, so every
         kernel launch hits a warmed compile-cache entry. Tiles route to
         devices through the compiler's cost-LPT schedule (host-side
-        numpy — no effect on the zero-recompile contract). With
-        supervision enabled (``cfg.exec_devices`` or an installed fault
-        injector), stage 1 runs through :func:`execute_supervised`
-        instead — per-shard completion records, tile-granular recovery,
-        graceful degradation."""
+        numpy — no effect on the zero-recompile contract); a resolved
+        ``comms_plan`` overrides that with its locality placement and
+        swaps in the pinned ring/hierarchical scorer (still one jitted
+        function — zero recompiles hold). With supervision enabled
+        (``cfg.exec_devices`` or an installed fault injector), stage 1
+        runs through :func:`execute_supervised` instead — per-shard
+        completion records, tile-granular recovery, graceful
+        degradation."""
         cfg = self.cfg
         catalog = pad_catalog(catalog, cfg.tile_chunk)
         if self._use_supervisor:
             return self._score_supervised(feats_a, catalog, q_buf, ctx)
+        use_comms = (comms_plan is not None
+                     and comms_plan.policy != "flat"
+                     and self._comms_scorer is not None)
         # Scheduling places tiles on devices — a single-host service has
         # nowhere to place them, so skip the per-batch host work.
         sched = (schedule_tiles(catalog, n_dev=self._n_dev,
-                                policy=cfg.schedule_policy)
+                                policy=cfg.schedule_policy,
+                                comms_plan=comms_plan if use_comms else None)
                  if self.mesh is not None else None)
         return execute(
             catalog, feats_a, jnp.asarray(q_buf),
             threshold=self._stage1, impl=cfg.kernel_impl,
             mesh=self.mesh, axis=self.axis, schedule=sched,
-            scorer=self._dist_scorer, chunk_tiles=cfg.tile_chunk,
+            scorer=self._comms_scorer if use_comms else self._dist_scorer,
+            comms_plan=comms_plan if use_comms else None,
+            chunk_tiles=cfg.tile_chunk,
             fixed_chunks=self.mesh is not None,
             compact_capacity=cfg.compact_capacity)
 
@@ -740,14 +799,30 @@ class ERService:
                            else plan_pair_range_2src)
                 plan = planner(bdm2, cfg.r)
                 planned += plan.total_pairs
+                cat = lower(plan_to_job(plan), self._block_m, self._block_n)
+                cplan = None
+                if self._comms_scorer is not None:
+                    # Plan on the chunk-padded catalog so the locality
+                    # placement covers every tile the executor will see
+                    # (pad_catalog in _score is then a no-op). Pinned at
+                    # zero hops — see _build_dist_scorer; a degraded
+                    # plan routes the job to the flat scorer.
+                    cat = pad_catalog(cat, cfg.tile_chunk)
+                    cplan = plan_comms(
+                        cat, int(self._feats_keyed.shape[0]), self._n_dev,
+                        policy=cfg.comms, feature_dim=cfg.feature_dim,
+                        self_join=False,
+                        group=(self._pin_group
+                               if cfg.comms == "hierarchical" else None),
+                        pin_hops=0, pin_inter_hops=0)
                 jobs.append(_PlannedJob(
                     feats_a=self._feats_keyed,
-                    catalog=lower(plan_to_job(plan),
-                                  self._block_m, self._block_n),
+                    catalog=cat,
                     q_buf=self._bucket_buffer(feats[q_rows], bucket),
                     codes_a=self._k_codes, lens_a=self._k_lens,
                     codes_b=codes[q_rows], lens_b=lens[q_rows],
-                    map_a=self._to_global, map_b=q_rows))
+                    map_a=self._to_global, map_b=q_rows,
+                    comms_plan=cplan))
 
             # ---- match_⊥, cross-restricted: null queries × corpus ----
             null_q = np.flatnonzero(qb < 0)
@@ -790,7 +865,8 @@ class ERService:
         matches = MatchResponse()
         n_reports = len(ctx.reports)
         for job in pb.jobs:
-            ca, cb = self._score(job.feats_a, job.catalog, job.q_buf, ctx)
+            ca, cb = self._score(job.feats_a, job.catalog, job.q_buf, ctx,
+                                 comms_plan=job.comms_plan)
             ha, hb = verify_pairs(job.codes_a, job.lens_a,
                                   job.codes_b, job.lens_b,
                                   ca, cb, cfg.threshold)

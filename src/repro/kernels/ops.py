@@ -22,8 +22,8 @@ from .pair_sim import \
     pair_scores_catalog_compact as _pair_scores_catalog_compact
 
 __all__ = ["pair_scores", "pair_scores_catalog",
-           "pair_scores_catalog_compact", "grouped_matmul",
-           "attention", "pad_groups"]
+           "pair_scores_catalog_raw", "pair_scores_catalog_compact",
+           "grouped_matmul", "attention", "pad_groups"]
 
 
 def _resolve(impl: str) -> str:
@@ -56,6 +56,21 @@ def pair_scores_catalog(a, b, catalog, *, threshold: float = 0.8,
     return _pair_scores_catalog(a, b, catalog, threshold=threshold,
                                 block_m=block_m, block_n=block_n,
                                 interpret=(impl == "interpret"))
+
+
+def pair_scores_catalog_raw(a, b, catalog, *, block_m: int = 128,
+                            block_n: int = 128, impl: str = "pallas"):
+    """UNthresholded, UNmasked tile scores (see
+    ref.pair_scores_catalog_raw_ref) — the model-parallel partial-score
+    path, where the threshold and the catalog predicates only make sense
+    AFTER a psum over the model axis. Every ``impl`` routes to the
+    batched dynamic-slice ``dot_general`` — on any backend that matmul IS
+    the MXU/compute path; a fused Pallas raw variant would only re-fuse
+    the slice, and the predicate epilogue it normally fuses is exactly
+    what partial scores must defer."""
+    del impl
+    return ref.pair_scores_catalog_raw_ref(
+        a, b, catalog, block_m=block_m, block_n=block_n)
 
 
 def pair_scores_catalog_compact(a, b, catalog, *, threshold: float = 0.8,

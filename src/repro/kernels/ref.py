@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["pair_scores_ref", "pair_scores_catalog_ref",
-           "pair_scores_catalog_compact_ref",
+           "pair_scores_catalog_raw_ref", "pair_scores_catalog_compact_ref",
+           "pack_survivor_mask",
            "grouped_matmul_ref", "attention_ref"]
 
 
@@ -57,20 +58,43 @@ def pair_scores_catalog_ref(a, b, catalog, *, threshold: float = 0.8,
     return jax.vmap(one)(catalog)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("threshold", "block_m", "block_n", "capacity"))
-def pair_scores_catalog_compact_ref(a, b, catalog, *, threshold: float = 0.8,
-                                    block_m: int = 128, block_n: int = 128,
-                                    capacity: int = 1024):
-    """jnp twin of pair_sim.pair_scores_catalog_compact: same
-    ``(packed, counts)`` contract, built from the mask via an inclusive
-    row-major cumsum (pack slot = rank − 1) and a batched scatter with a
-    dump slot at ``capacity`` that absorbs overflow survivors. Slots
-    beyond min(count, capacity) stay 0, matching the kernel exactly."""
-    masks = pair_scores_catalog_ref(a, b, catalog, threshold=threshold,
-                                    block_m=block_m, block_n=block_n)
+def pair_scores_catalog_raw_ref(a, b, catalog, *, block_m: int = 128,
+                                block_n: int = 128):
+    """UNthresholded, UNmasked per-tile scores — the model-parallel
+    partial-score path: each model shard holds a (rows, d/n_model) panel,
+    so its dots are *partial sums* and neither the threshold nor the
+    catalog predicates can be applied until a ``psum`` over the model
+    axis combines them. Same dynamic-slice batched matmul as
+    :func:`pair_scores_catalog_ref`, returning raw (T, bm, bn) f32 —
+    shard_map-safe (no jit wrapper: the caller's shard body is the jit
+    unit, and the post-psum threshold+mask epilogue lives there)."""
+    m, d = a.shape
+    n = b.shape[0]
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    a_p = jnp.zeros((mp, d), a.dtype).at[:m].set(a)
+    b_p = jnp.zeros((np_, d), b.dtype).at[:n].set(b)
+
+    def one(entry):
+        ai = jax.lax.dynamic_slice(a_p, (entry[0] * block_m, 0), (block_m, d))
+        bi = jax.lax.dynamic_slice(b_p, (entry[1] * block_n, 0), (block_n, d))
+        return jax.lax.dot_general(
+            ai, bi, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    return jax.vmap(one)(catalog)
+
+
+def pack_survivor_mask(masks, capacity: int):
+    """Dense (T, bm, bn) survivor masks → the kernel's ``(packed,
+    counts)`` contract, via an inclusive row-major cumsum (pack slot =
+    rank − 1) and a batched scatter with a dump slot at ``capacity`` that
+    absorbs overflow survivors. Slots beyond min(count, capacity) stay 0,
+    matching the Pallas epilogue exactly. Shared by
+    :func:`pair_scores_catalog_compact_ref` and the model-sharded scorer
+    (which must pack *after* its cross-shard psum)."""
     t = masks.shape[0]
-    p = block_m * block_n
+    p = masks.shape[1] * masks.shape[2]
     flat = masks.reshape(t, p) > 0
     cum = jnp.cumsum(flat.astype(jnp.int32), axis=1)
     counts = cum[:, -1:]
@@ -80,6 +104,20 @@ def pair_scores_catalog_compact_ref(a, b, catalog, *, threshold: float = 0.8,
     packed = packed.at[jnp.arange(t)[:, None], dest].set(
         jnp.where(flat, pos, 0))
     return packed[:, :capacity], counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "block_m", "block_n", "capacity"))
+def pair_scores_catalog_compact_ref(a, b, catalog, *, threshold: float = 0.8,
+                                    block_m: int = 128, block_n: int = 128,
+                                    capacity: int = 1024):
+    """jnp twin of pair_sim.pair_scores_catalog_compact: same
+    ``(packed, counts)`` contract — the mask from
+    :func:`pair_scores_catalog_ref` packed by
+    :func:`pack_survivor_mask`."""
+    masks = pair_scores_catalog_ref(a, b, catalog, threshold=threshold,
+                                    block_m=block_m, block_n=block_n)
+    return pack_survivor_mask(masks, capacity)
 
 
 def grouped_matmul_ref(x, tile_expert, w, *, block_t: int = 128):

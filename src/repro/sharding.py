@@ -26,10 +26,34 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["constrain", "param_spec", "param_shardings", "batch_spec",
-           "cache_spec", "cache_shardings", "DP_AXES", "TP_AXIS"]
+           "cache_spec", "cache_shardings", "make_er_mesh",
+           "DP_AXES", "TP_AXIS"]
 
 DP_AXES = ("pod", "data")
 TP_AXIS = "model"
+
+
+def make_er_mesh(n_data: int, n_model: int = 1) -> Mesh:
+    """The ER executor's 2-D ``(data, model)`` mesh: corpus rows shard
+    over ``data``, the hashed-n-gram feature dimension over ``model``
+    (``compiler.execute(model_axis="model")`` psums the partial tile
+    scores). Reuses the train substrate's axis names so the same mesh
+    can carry both workloads; ``n_model=1`` is the classic 1-D data
+    mesh every existing ER path runs on. Devices reshape row-major —
+    the ``model`` axis varies fastest, keeping a model group's devices
+    adjacent (the higher-bandwidth hop, same discipline as the dp×mp
+    train meshes)."""
+    devices = np.asarray(jax.devices())
+    if devices.size < n_data * n_model:
+        raise ValueError(f"need {n_data * n_model} devices for a "
+                         f"({n_data}, {n_model}) mesh, "
+                         f"have {devices.size}")
+    grid = devices[:n_data * n_model].reshape(n_data, n_model)
+    try:
+        return Mesh(grid, ("data", TP_AXIS),
+                    axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    except (AttributeError, TypeError):   # older jax: no AxisType/kwarg
+        return Mesh(grid, ("data", TP_AXIS))
 
 
 def _active_axes() -> Tuple[str, ...]:
